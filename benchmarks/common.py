@@ -1,0 +1,41 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def timer(fn, *args, repeats: int = 1, **kw):
+    """Returns (result, seconds_per_call)."""
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) / repeats
+
+
+def exact_knn(data: np.ndarray, q: np.ndarray, k: int):
+    d = np.linalg.norm(data - q, axis=-1)
+    idx = np.argpartition(d, min(k, d.size - 1))[:k]
+    idx = idx[np.argsort(d[idx])]
+    return idx, d[idx]
+
+
+def recall_of(ids, exact_ids) -> float:
+    k = len(exact_ids)
+    return len(set(np.asarray(ids).tolist()) & set(np.asarray(exact_ids).tolist())) / k
+
+
+def overall_ratio(dists, exact_dists) -> float:
+    """Eq. 12: mean of returned/exact distance, positionwise."""
+    dists = np.sort(np.asarray(dists, np.float64))
+    exact = np.sort(np.asarray(exact_dists, np.float64))
+    m = min(len(dists), len(exact))
+    if m == 0:
+        return float("nan")
+    return float(np.mean(dists[:m] / np.maximum(exact[:m], 1e-12)))
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

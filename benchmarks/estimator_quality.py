@@ -1,0 +1,65 @@
+"""Fig. 3 reproduction: distance-estimator quality (recall@T / ratio).
+
+Compares candidate selection by:
+  L2   — ||q'-o'||₂ in the m-dim projected space (PM-LSH's estimator,
+         Lemma 2: the MLE/unbiased χ² estimator)
+  L1   — ||q'-o'||₁ in the projected space
+  QD   — quantized-distance surrogate (bucket index distance, the
+         bucket-granularity estimation of the PS/RE families)
+  Rand — random ranking (floor)
+
+For each query: take the top-T estimated candidates, measure recall of
+the true 100-NN inside them (paper: Trevi, 10K sample, m=15).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import csv_row, timer
+from .datasets import make_dataset, make_queries
+
+
+def run(quick: bool = True):
+    from repro.core.hashing import BucketFamily, ProjectionFamily
+
+    # nus = the highest-LID twin (24.5): candidate selection is hardest
+    # there, which is where estimator quality separates (paper Fig. 3)
+    data = make_dataset("nus", n=4000 if quick else 10000)
+    n, d = data.shape
+    m, k = 15, 100
+    queries = make_queries(data, 8 if quick else 20)
+    fam = ProjectionFamily.create(d, m, seed=0)
+    proj = np.asarray(fam.project(data))
+    bfam = BucketFamily.create(d, m, w=4.0, seed=0)
+    buckets = np.asarray(bfam.hash(data))
+
+    rows = []
+    Ts = [100, 150, 300, 600, 1200]
+    rng = np.random.default_rng(0)
+    out_lines = []
+    for T in Ts:
+        rec = {e: [] for e in ("L2", "L1", "QD", "Rand")}
+        for q in queries:
+            exact = np.argsort(np.linalg.norm(data - q, axis=-1))[:k]
+            qp = np.asarray(fam.project(q[None]))[0]
+            qb = np.asarray(bfam.hash(q[None]))[0]
+            est = {
+                "L2": np.linalg.norm(proj - qp, axis=-1),
+                "L1": np.abs(proj - qp).sum(axis=-1),
+                "QD": np.abs(buckets - qb).sum(axis=-1).astype(np.float64),
+                "Rand": rng.random(n),
+            }
+            for name, e in est.items():
+                cand = np.argpartition(e, T)[:T]
+                rec[name].append(len(set(cand.tolist()) & set(exact.tolist())) / k)
+        row = {name: float(np.mean(v)) for name, v in rec.items()}
+        rows.append((T, row))
+        out_lines.append(
+            csv_row(f"fig3_recall_T{T}", 0.0,
+                    "L2=%.3f;L1=%.3f;QD=%.3f;Rand=%.3f"
+                    % (row["L2"], row["L1"], row["QD"], row["Rand"]))
+        )
+    # the paper's claim: the L2 projected estimator dominates
+    assert all(r["L2"] >= r["QD"] - 0.02 and r["L2"] >= r["Rand"]
+               for _, r in rows)
+    return out_lines

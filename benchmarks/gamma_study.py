@@ -1,0 +1,39 @@
+"""Figs. 7/14-16 + Table 5 reproduction: the γ distribution, node
+capacity M, Promote methods, and construction time."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import csv_row, timer
+from .datasets import make_dataset
+
+
+def run(quick: bool = True):
+    from repro.core.cp import calibrate_gamma
+    from repro.core.hashing import ProjectionFamily
+    from repro.core.pmtree import build_bulk, build_insert
+
+    out = []
+    data = make_dataset("audio", n=1500 if quick else 10000)
+    fam = ProjectionFamily.create(data.shape[1], 15, seed=0)
+    proj = np.asarray(fam.project(data))
+
+    # ---- effect of node capacity M on γ (Fig. 14)
+    for M in (2, 16, 64):
+        tree = build_bulk(proj, capacity=M, fanout=2, n_pivots=5, seed=0)
+        g85 = calibrate_gamma(tree, pr=0.85, n_pairs=50_000)
+        g50 = calibrate_gamma(tree, pr=0.50, n_pairs=50_000)
+        out.append(csv_row(f"fig14_M{M}", 0.0,
+                           "gamma85=%.3f;gamma50=%.3f" % (g85, g50)))
+
+    # ---- Promote methods: construction time (Table 5) + γ (Fig. 16)
+    sub = proj[: 600 if quick else 3000]
+    for promote in ("m_RAD", "random"):
+        tree, dt = timer(build_insert, sub, capacity=16, promote=promote,
+                         n_pivots=5, seed=0)
+        g = calibrate_gamma(tree, pr=0.85, n_pairs=20_000)
+        out.append(csv_row(
+            f"table5_{promote}", dt * 1e6,
+            "nodes=%d;depth=%d;gamma85=%.3f" % (tree.n_nodes, tree.depth, g),
+        ))
+    return out

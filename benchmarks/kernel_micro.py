@@ -1,0 +1,65 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp oracle.
+
+On this CPU container the meaningful numbers are the ORACLE timings
+(XLA:CPU-compiled) plus correctness deltas for the interpret-mode
+kernels; real TPU timings come from the roofline analysis instead.
+`derived` reports effective GB/s of the oracle path and the max |Δ|.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import csv_row, timer
+
+
+def run(quick: bool = True):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+    from repro.kernels.pairwise_dist import pairwise_sq_dist_pallas
+    from repro.kernels.project_dist import project_dist_pallas
+    from repro.kernels.topk import topk_smallest_pallas
+
+    out = []
+    rng = np.random.default_rng(0)
+    B, N, d, m, k = (16, 2048, 128, 16, 32) if quick else (32, 8192, 256, 16, 64)
+
+    q = jnp.asarray(rng.normal(size=(B, d)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(N, d)), jnp.float32)
+    a = jnp.asarray(rng.normal(size=(d, m)), jnp.float32)
+
+    # pairwise distance
+    f = jax.jit(ref.pairwise_sq_dist)
+    f(q, x).block_until_ready()
+    res, dt = timer(lambda: f(q, x).block_until_ready(), repeats=5)
+    gbs = (B * d + N * d + B * N) * 4 / dt / 1e9
+    delta = float(jnp.abs(
+        pairwise_sq_dist_pallas(q[:4], x[:256], interpret=True)
+        - ref.pairwise_sq_dist(q[:4], x[:256])
+    ).max())
+    out.append(csv_row("kernel_pairwise_dist", dt * 1e6,
+                       "oracle_GBps=%.2f;interp_maxerr=%.1e" % (gbs, delta)))
+
+    # fused project+distance
+    qp = q @ a
+    f2 = jax.jit(ref.project_dist)
+    f2(x, a, qp).block_until_ready()
+    _, dt2 = timer(lambda: f2(x, a, qp).block_until_ready(), repeats=5)
+    delta2 = float(jnp.abs(
+        project_dist_pallas(x[:256], a, qp[:4], interpret=True)
+        - ref.project_dist(x[:256], a, qp[:4])
+    ).max())
+    out.append(csv_row("kernel_project_dist", dt2 * 1e6,
+                       "interp_maxerr=%.1e" % delta2))
+
+    # top-k
+    dmat = ref.pairwise_sq_dist(q, x)
+    f3 = jax.jit(lambda d_: ref.topk_smallest(d_, k))
+    f3(dmat)[0].block_until_ready()
+    _, dt3 = timer(lambda: f3(dmat)[0].block_until_ready(), repeats=5)
+    gv, _ = topk_smallest_pallas(dmat[:4, :512], k, interpret=True)
+    wv, _ = ref.topk_smallest(dmat[:4, :512], k)
+    out.append(csv_row("kernel_topk", dt3 * 1e6,
+                       "interp_maxerr=%.1e" % float(jnp.abs(gv - wv).max())))
+    return out

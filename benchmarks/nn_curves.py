@@ -1,0 +1,58 @@
+"""Figs. 9-13 reproduction: effect of k, and recall/ratio-time curves.
+
+Varying k ∈ {1,10,...,100} (paper Figs. 9-11) and varying the candidate
+budget (∝ c, paper Figs. 12-13) trades time for quality.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import csv_row, exact_knn, overall_ratio, recall_of, timer
+from .datasets import make_dataset, make_queries
+
+
+def run(quick: bool = True):
+    from repro.core import PMLSH
+    from repro.core.flat_index import ann_search, build_flat_index, \
+        candidate_budget
+    from repro.core.estimator import solve_parameters
+
+    data = make_dataset("cifar", n=3000 if quick else 8000)
+    queries = make_queries(data, 5 if quick else 15)
+    out = []
+
+    # ---- effect of k (Figs. 9-11)
+    idx = PMLSH(data, c=1.5, m=15, seed=0)
+    for k in ([1, 10, 50, 100] if quick else [1, 10, 20, 40, 60, 80, 100]):
+        recs, ratios, times = [], [], []
+        for q in queries:
+            ex_i, ex_d = exact_knn(data, q, k)
+            res, dt = timer(idx.ann_query, q, k)
+            recs.append(recall_of(res.indices, ex_i))
+            ratios.append(overall_ratio(res.distances, ex_d))
+            times.append(dt)
+        out.append(csv_row(
+            f"fig9_k{k}", float(np.mean(times)) * 1e6,
+            "recall=%.3f;ratio=%.4f" % (np.mean(recs), np.mean(ratios)),
+        ))
+
+    # ---- recall-time curve by sweeping c (i.e. the candidate budget)
+    flat = build_flat_index(data, m=15, seed=0)
+    k = 50
+    for c in [1.1, 1.3, 1.5, 2.0]:
+        params = solve_parameters(c, m=15)
+        T = candidate_budget(params, flat.n, k)
+        recs, ratios, times = [], [], []
+        for q in queries:
+            ex_i, ex_d = exact_knn(data, q, k)
+            (ids, dd), dt = timer(
+                ann_search, flat, q[None], k, c, use_kernels=False
+            )
+            recs.append(recall_of(np.asarray(ids)[0], ex_i))
+            ratios.append(overall_ratio(np.asarray(dd)[0], ex_d))
+            times.append(dt)
+        out.append(csv_row(
+            f"fig12_c{c}", float(np.mean(times)) * 1e6,
+            "recall=%.3f;ratio=%.4f;T=%d" % (np.mean(recs), np.mean(ratios), T),
+        ))
+    return out

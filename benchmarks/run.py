@@ -1,0 +1,59 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,us_per_call,derived`` CSV rows (framework contract), one
+per measurement, grouped per paper artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+MODULES = [
+    ("fig3_estimator", "benchmarks.estimator_quality"),
+    ("table2_cost_model", "benchmarks.cost_model"),
+    ("fig8_param_study", "benchmarks.param_study"),
+    ("table4_nn", "benchmarks.nn_queries"),
+    ("figs9_13_curves", "benchmarks.nn_curves"),
+    ("table6_cp", "benchmarks.cp_queries"),
+    ("figs7_14_16_gamma", "benchmarks.gamma_study"),
+    ("kernel_micro", "benchmarks.kernel_micro"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slow on CPU)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated module keys to run")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failed = []
+    for key, modname in MODULES:
+        if only and key not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            rows = mod.run(quick=not args.full)
+            for r in rows:
+                print(r, flush=True)
+            print(f"# {key}: ok in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failed.append(key)
+            print(f"# {key}: FAILED\n# {traceback.format_exc()}",
+                  file=sys.stderr, flush=True)
+    if failed:
+        print(f"# FAILED modules: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

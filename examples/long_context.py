@@ -1,0 +1,60 @@
+"""Long-context decode with PM-LSH retrieval attention: decode against a
+KV cache of 8k positions with a candidate budget of 256 keys per step,
+and compare against dense attention.
+
+    PYTHONPATH=src python examples/long_context.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import model_module
+
+
+def run(cfg, label, ctx_len=8192, prefill_len=64):
+    mod = model_module(cfg)
+    params = mod.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    tokens = jnp.array(rng.integers(0, cfg.vocab_size, (1, prefill_len)),
+                       jnp.int32)
+    caches = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        mod.cache_specs(cfg, 1, ctx_len),
+    )
+    _, caches = mod.forward(params, tokens, cfg, caches=caches)
+
+    step = jax.jit(lambda p, c, b: mod.decode_step(p, c, b, cfg))
+    batch = {"tokens": tokens[:, :1], "position": jnp.int32(prefill_len)}
+    logits, caches = step(params, caches, batch)  # compile
+    t0 = time.perf_counter()
+    for i in range(8):
+        batch = {"tokens": jnp.argmax(logits, -1).astype(jnp.int32),
+                 "position": jnp.int32(prefill_len + 1 + i)}
+        logits, caches = step(params, caches, batch)
+    logits.block_until_ready()
+    dt = (time.perf_counter() - t0) / 8
+    print(f"{label:>24}: {dt*1e3:7.2f} ms/token "
+          f"(cache {ctx_len} × {cfg.n_kv_heads} kv-heads, "
+          f"budget {'dense' if not cfg.lsh_attention else cfg.lsh_topk})")
+    return logits
+
+
+def main():
+    base = get_smoke_config("yi_6b")
+    dense = base.replace(lsh_attention=False)
+    lsh = base.replace(lsh_attention=True, lsh_topk=256, lsh_m=16)
+    l_dense = run(dense, "dense attention")
+    l_lsh = run(lsh, "PM-LSH retrieval attn")
+    # same weights modulo the untrained lsh projection — logits correlate
+    corr = np.corrcoef(
+        np.asarray(l_dense).ravel(), np.asarray(l_lsh).ravel()
+    )[0, 1]
+    print(f"dense↔LSH logit correlation: {corr:.3f} "
+          "(short prefill ⇒ every key fits the budget ⇒ ≈ identical)")
+
+
+if __name__ == "__main__":
+    main()

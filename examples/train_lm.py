@@ -1,0 +1,52 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps on
+CPU with the full production stack (sharded train step, async
+checkpointing, fault-tolerant loop, deterministic data pipeline).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+
+The config is yi-6b's family scaled to ~100M params (the assignment's
+"train ~100M model for a few hundred steps" deliverable).
+"""
+import argparse
+import tempfile
+
+from repro.configs import get_config
+from repro.launch.mesh import make_host_mesh
+from repro.launch.train import TrainLoop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    # ~100M params: 12L × d=768 over yi's dense llama family
+    cfg = get_config("yi-6b").replace(
+        name="yi-100m",
+        n_layers=12,
+        d_model=768,
+        n_heads=12,
+        n_kv_heads=4,
+        head_dim=64,
+        d_ff=2048,
+        vocab_size=32000,
+        lsh_attention=False,
+    )
+    n_params = cfg.param_count()
+    print(f"training {cfg.name}: {n_params/1e6:.0f}M params, "
+          f"{args.steps} steps, batch {args.batch} × seq {args.seq_len}")
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="repro_ckpt_")
+    mesh = make_host_mesh()
+    loop = TrainLoop(cfg, mesh, batch=args.batch, seq_len=args.seq_len,
+                     ckpt_dir=ckpt_dir, ckpt_every=100)
+    out = loop.run(args.steps, log_every=20)
+    print(f"\nfinal loss {out['final_loss']:.4f} "
+          f"(first {out['losses'][0]:.4f}); checkpoints in {ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from
+results/dryrun.jsonl (run after scripts/run_dryrun_sweep.sh)."""
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCHS = [
+    "qwen3-moe-30b-a3b", "qwen2-moe-a2_7b", "deepseek-67b", "yi-6b",
+    "mistral-large-123b", "minitron-8b", "llama32-vision-11b",
+    "recurrentgemma-9b", "xlstm-125m", "whisper-base",
+]
+
+
+def fmt_bytes(b):
+    return f"{b/1e9:.1f}"
+
+
+def main(path="results/dryrun.jsonl"):
+    recs = {}
+    for line in open(path):
+        r = json.loads(line)
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+
+    print("### §Dry-run — 40 cells × 2 meshes (status / GB-per-device / compile s)\n")
+    print("| arch | shape | single: status, arg+temp GB, compile s | multi: status, arg+temp GB, compile s |")
+    print("|---|---|---|---|")
+    for a in ARCHS:
+        for s in SHAPES:
+            cells = []
+            for m in ("single", "multi"):
+                r = recs.get((a, s, m))
+                if r is None:
+                    cells.append("MISSING")
+                elif r["status"] == "skipped":
+                    cells.append("skipped (full attn @500k)")
+                elif r["status"] != "ok":
+                    cells.append("ERROR")
+                else:
+                    mem = r["memory"]
+                    gb = (mem.get("argument_size_in_bytes", 0)
+                          + mem.get("temp_size_in_bytes", 0)) / 1e9
+                    cells.append(f"ok, {gb:.1f} GB, {r['compile_s']:.0f}s")
+            print(f"| {a} | {s} | {cells[0]} | {cells[1]} |")
+
+    print("\n### §Roofline — single-pod (256 chips), analytic terms + HLO collectives\n")
+    print("| arch | shape | compute s | memory s | collective s | dominant | "
+          "model GFLOP/chip | useful ratio | roofline frac | AG GB | AR GB |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for a in ARCHS:
+        for s in SHAPES:
+            r = recs.get((a, s, "single"))
+            if not r or r["status"] != "ok":
+                continue
+            rf = r["roofline"]
+            c = r["collective_bytes"]
+            frac = rf["compute_s"] / max(rf["step_lower_bound_s"], 1e-12)
+            print(
+                f"| {a} | {s} | {rf['compute_s']:.4g} | {rf['memory_s']:.4g} "
+                f"| {rf['collective_s']:.4g} | {rf['dominant'].replace('_s','')} "
+                f"| {rf['model_flops_per_chip']/1e9:.0f} "
+                f"| {min(rf['useful_flops_ratio'],9.99):.2f} | {frac:.2f} "
+                f"| {c['all-gather']/1e9:.2f} | {c['all-reduce']/1e9:.2f} |"
+            )
+
+    # summary stats
+    doms = defaultdict(int)
+    for (a, s, m), r in recs.items():
+        if m == "single" and r["status"] == "ok":
+            doms[r["roofline"]["dominant"]] += 1
+    print("\nDominant-term histogram (single-pod):", dict(doms))
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,15 @@
+"""repro — PM-LSH (Zheng et al., VLDBJ 2021) as a production JAX framework.
+
+Layers:
+  repro.core     — the paper: LSH projections, χ² estimator, PM-tree,
+                   (c,k)-ANN and (c,k)-ACP query processing
+  repro.kernels  — Pallas TPU kernels for the verification hot spots
+  repro.models   — assigned LM architectures (dense/MoE/hybrid/SSM/...)
+  repro.configs  — one config per assigned architecture
+  repro.data     — data pipeline + LSH-CP near-duplicate dedup
+  repro.train    — optimizer, train_step, gradient compression
+  repro.serve    — KV cache, decode step, kNN-LM retrieval
+  repro.launch   — production mesh, dry-run, drivers, checkpointing
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,11 @@
+"""Assigned architecture configs. `get_config(name)` / `get_smoke_config(name)`."""
+from .base import (  # noqa: F401
+    ARCHS,
+    SHAPES,
+    InputShape,
+    ModelConfig,
+    get_config,
+    get_smoke_config,
+    input_specs,
+    list_archs,
+)

@@ -1,0 +1,25 @@
+"""PM-LSH core: the paper's contribution as a composable JAX library.
+
+Public surface:
+  hashing    — 2-stable projection / bucket families (Eq. 1, Eq. 3)
+  estimator  — χ² distance estimator + tunable confidence interval
+               (Lemmas 1-3), Eq. 10 parameter solver
+  pmtree     — PM-tree construction (bulk + paper-faithful insertion)
+  pmtree_query — host DFS (counted) and TPU level-synchronous queries
+  flat_index — TPU-native dense estimate→select→verify backend
+  ann        — Algorithms 1-2: (r,c)-BC, (c,k)-ANN (paper-faithful)
+  cp         — Algorithms 3-5: (c,k)-ACP branch&bound + radius filtering
+  distributed — shard_map sharded index: multi-device ANN / CP
+"""
+from .hashing import ProjectionFamily, BucketFamily  # noqa: F401
+from .estimator import (  # noqa: F401
+    PMLSHParams,
+    solve_parameters,
+    confidence_interval,
+    estimate_distance_sq,
+    select_rmin,
+)
+from .pmtree import FlatPMTree, build_bulk, build_insert, select_pivots  # noqa: F401
+from .ann import PMLSH, AnnResult  # noqa: F401
+from .cp import PMLSH_CP, CpResult, calibrate_gamma  # noqa: F401
+from .flat_index import FlatIndex, build_flat_index, ann_search  # noqa: F401

@@ -1,0 +1,170 @@
+"""PM-tree range queries — host DFS (paper-faithful, counted) and
+TPU-native level-synchronous masked traversal (JAX).
+
+The host path mirrors the paper's Algorithm (depth-first + Eq. 5
+pruning) and counts distance computations so the Table-2 cost-model
+comparison can be validated against actual traversals.
+
+The device path evaluates Eq. 5 densely per level: every node of a
+level is tested with vectorized boolean algebra, children inherit their
+parent's verdict, and the surviving leaves induce a point mask.  There
+is no data-dependent control flow — ideal for TPU (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .pmtree import FlatPMTree
+
+__all__ = ["range_query_host", "DeviceTree", "range_mask_device", "QueryStats"]
+
+
+@dataclasses.dataclass
+class QueryStats:
+    """Work counters for the host traversal (cost-model validation)."""
+
+    nodes_accessed: int = 0
+    node_distance_computations: int = 0  # ||q, e.RO|| evaluations
+    point_distance_computations: int = 0  # ||q, o'|| evaluations (leaf scans)
+
+    @property
+    def total_distance_computations(self) -> int:
+        return self.node_distance_computations + self.point_distance_computations
+
+
+def range_query_host(
+    tree: FlatPMTree, q: np.ndarray, radius: float
+) -> tuple[np.ndarray, QueryStats]:
+    """Depth-first range(q, r) with Eq. 5 pruning.
+
+    Returns (slot indices into tree.points within the ball, stats).
+    Pivot distances ||q,p_i|| are computed once (s distance comps).
+    """
+    q = np.asarray(q, dtype=np.float32)
+    stats = QueryStats()
+    qp = np.linalg.norm(tree.pivots - q, axis=-1)  # (s,)
+    stats.node_distance_computations += tree.n_pivots
+    out: list[np.ndarray] = []
+    stack = [0]
+    while stack:
+        e = stack.pop()
+        stats.nodes_accessed += 1
+        # hyper-ring tests first: they reuse the cached qp distances (free)
+        if ((qp - radius) > tree.hr_max[e]).any() or (
+            (qp + radius) < tree.hr_min[e]
+        ).any():
+            continue
+        d = float(np.linalg.norm(tree.centers[e] - q))
+        stats.node_distance_computations += 1
+        if d > tree.radii[e] + radius:
+            continue
+        if tree.child_count[e] == 0:  # leaf — scan members
+            s, c = int(tree.leaf_start[e]), int(tree.leaf_count[e])
+            pts = tree.points[s : s + c]
+            dist = np.linalg.norm(pts - q, axis=-1)
+            stats.point_distance_computations += c
+            hit = np.where(dist <= radius)[0] + s
+            if hit.size:
+                out.append(hit)
+        else:
+            cs, cc = int(tree.child_start[e]), int(tree.child_count[e])
+            stack.extend(range(cs, cs + cc))
+    slots = np.concatenate(out) if out else np.zeros(0, np.int64)
+    return slots, stats
+
+
+# --------------------------------------------------------------------------
+# device path
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceTree:
+    """FlatPMTree arrays resident on device (a pytree of jnp arrays)."""
+
+    centers: jax.Array
+    radii: jax.Array
+    hr_min: jax.Array
+    hr_max: jax.Array
+    parent: jax.Array
+    point_leaf: jax.Array
+    points: jax.Array
+    pivots: jax.Array
+    level_offsets: tuple[int, ...]  # static
+
+    @staticmethod
+    def from_host(tree: FlatPMTree) -> "DeviceTree":
+        return DeviceTree(
+            centers=jnp.asarray(tree.centers),
+            radii=jnp.asarray(tree.radii),
+            hr_min=jnp.asarray(tree.hr_min),
+            hr_max=jnp.asarray(tree.hr_max),
+            parent=jnp.asarray(tree.parent),
+            point_leaf=jnp.asarray(tree.point_leaf),
+            points=jnp.asarray(tree.points),
+            pivots=jnp.asarray(tree.pivots),
+            level_offsets=tuple(int(x) for x in tree.level_offsets),
+        )
+
+
+jax.tree_util.register_dataclass(
+    DeviceTree,
+    data_fields=[
+        "centers", "radii", "hr_min", "hr_max", "parent", "point_leaf",
+        "points", "pivots",
+    ],
+    meta_fields=["level_offsets"],
+)
+
+
+def range_mask_device(tree: DeviceTree, q: jax.Array, radius: jax.Array) -> jax.Array:
+    """Level-synchronous masked range query.
+
+    Returns a boolean mask over point *slots* (tree.points order) that is
+    True exactly for points whose node chain passes Eq. 5 AND whose own
+    projected distance is within `radius`.  Dense per level; no gather
+    scatter irregularity.  jit/vmap-safe (radius may be traced).
+    """
+    q = jnp.asarray(q, jnp.float32)
+    qp = jnp.linalg.norm(tree.pivots - q[None, :], axis=-1)  # (s,)
+
+    # per-node Eq. 5 test, all nodes at once (cheap: N_nodes ≈ n/M · 16/15)
+    dc = jnp.linalg.norm(tree.centers - q[None, :], axis=-1)  # (N,)
+    ball_ok = dc <= tree.radii + radius
+    ring_ok = jnp.all(
+        ((qp[None, :] - radius) <= tree.hr_max)
+        & ((qp[None, :] + radius) >= tree.hr_min),
+        axis=-1,
+    )
+    self_ok = ball_ok & ring_ok  # (N,)
+
+    # propagate down the levels: node passes iff self_ok & parent passed
+    offs = tree.level_offsets
+    passed = self_ok
+    for lvl in range(1, len(offs) - 1):
+        lo, hi = offs[lvl], offs[lvl + 1]
+        seg = jax.lax.dynamic_slice_in_dim(passed, lo, hi - lo)
+        par = jax.lax.dynamic_slice_in_dim(tree.parent, lo, hi - lo)
+        seg = seg & passed[par]
+        passed = jax.lax.dynamic_update_slice_in_dim(passed, seg, lo, axis=0)
+
+    leaf_pass = passed[tree.point_leaf]  # (n,)
+    dist = jnp.linalg.norm(tree.points - q[None, :], axis=-1)
+    return leaf_pass & (dist <= radius)
+
+
+def range_query_device(
+    tree: DeviceTree, q: jax.Array, radius: jax.Array, max_results: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fixed-size range query: returns (slots, proj_dists, valid_mask) of
+    the up-to-`max_results` nearest in-ball points (projected space)."""
+    mask = range_mask_device(tree, q, radius)
+    dist = jnp.linalg.norm(tree.points - jnp.asarray(q, jnp.float32)[None, :], axis=-1)
+    masked = jnp.where(mask, dist, jnp.inf)
+    neg, idx = jax.lax.top_k(-masked, max_results)
+    d = -neg
+    return idx, d, jnp.isfinite(d)

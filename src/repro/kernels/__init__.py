@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for PM-LSH's compute hot spots.
+
+kernels:
+  pairwise_dist — candidate VERIFICATION: exact d-dim distances (MXU)
+  project_dist  — fused ESTIMATE: x@A then ||·-q'||², projection stays in VMEM
+  topk          — streaming SELECT: running top-k across distance tiles
+ops  — jit'd public wrappers (backend-aware dispatch)
+ref  — pure-jnp oracles (the semantics contract; tests sweep against these)
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,56 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+Dispatch policy: Pallas kernels are TPU programs; on the CPU backend of
+this container they execute through `interpret=True` (kernel body run
+op-by-op — bit-accurate, slow).  Each wrapper therefore routes:
+
+    TPU backend          → compiled Pallas kernel
+    elsewhere, validate  → interpret-mode Pallas (tests force this)
+    elsewhere, fast path → the jnp oracle from ref.py (identical math)
+
+`force` overrides: "pallas" | "interpret" | "ref" | None (auto).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .pairwise_dist import pairwise_sq_dist_pallas
+from .project_dist import project_dist_pallas
+from .topk import topk_smallest_pallas
+
+__all__ = ["pairwise_sq_dist", "project_dist", "topk_smallest"]
+
+
+def _mode(force: str | None) -> str:
+    if force is not None:
+        return force
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def pairwise_sq_dist(q: jax.Array, x: jax.Array, *, force: str | None = None,
+                     **block_kw) -> jax.Array:
+    """(B,d) × (N,d) → (B,N) squared Euclidean distances (f32)."""
+    mode = _mode(force)
+    if mode == "ref":
+        return ref.pairwise_sq_dist(q, x)
+    return pairwise_sq_dist_pallas(q, x, interpret=(mode == "interpret"), **block_kw)
+
+
+def project_dist(x: jax.Array, a: jax.Array, qp: jax.Array, *,
+                 force: str | None = None, **block_kw) -> jax.Array:
+    """Fused (x@a) projected distances to qp: (N,d),(d,m),(B,m) → (B,N)."""
+    mode = _mode(force)
+    if mode == "ref":
+        return ref.project_dist(x, a, qp)
+    return project_dist_pallas(x, a, qp, interpret=(mode == "interpret"), **block_kw)
+
+
+def topk_smallest(d: jax.Array, k: int, *, force: str | None = None,
+                  **block_kw) -> tuple[jax.Array, jax.Array]:
+    """Row-wise k smallest (values, indices), ascending."""
+    mode = _mode(force)
+    if mode == "ref":
+        return ref.topk_smallest(d, k)
+    return topk_smallest_pallas(d, k, interpret=(mode == "interpret"), **block_kw)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each function here defines the EXACT semantics the corresponding kernel
+in this package must reproduce; tests sweep shapes/dtypes and
+`assert_allclose(kernel, ref)`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["pairwise_sq_dist", "project_dist", "topk_smallest"]
+
+
+def pairwise_sq_dist(q: jax.Array, x: jax.Array) -> jax.Array:
+    """Squared Euclidean distances between rows of q (B,d) and x (N,d).
+
+    Returns (B, N) float32, clamped at 0 (guards fp cancellation).
+    """
+    q = jnp.asarray(q, jnp.float32)
+    x = jnp.asarray(x, jnp.float32)
+    qn = jnp.sum(q * q, axis=-1, keepdims=True)  # (B, 1)
+    xn = jnp.sum(x * x, axis=-1)  # (N,)
+    d2 = qn + xn[None, :] - 2.0 * (q @ x.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def project_dist(x: jax.Array, a: jax.Array, qp: jax.Array) -> jax.Array:
+    """Fused LSH estimate: squared PROJECTED distances ||x@a - qp||².
+
+    x: (N, d) points, a: (d, m) projection, qp: (B, m) projected queries.
+    Returns (B, N) float32.  Semantically pairwise_sq_dist(qp, x @ a) —
+    the kernel's value is that x@a never round-trips through HBM.
+    """
+    proj = jnp.asarray(x, jnp.float32) @ jnp.asarray(a, jnp.float32)  # (N, m)
+    return pairwise_sq_dist(qp, proj)
+
+
+def topk_smallest(d: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """k smallest entries per row of d (B, N), ascending.
+
+    Returns (values (B,k) float32, indices (B,k) int32).
+    """
+    neg, idx = jax.lax.top_k(-jnp.asarray(d, jnp.float32), k)
+    return -neg, idx.astype(jnp.int32)

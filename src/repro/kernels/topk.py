@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: streaming k-smallest selection over distance tiles.
+
+PM-LSH's SELECT step takes the T = βn + k projected-nearest candidates.
+XLA's native `lax.top_k` is fine when the full (B, N) distance row fits
+HBM, but streaming selection fused after the distance tiles avoids a
+second pass.  This kernel demonstrates the streaming pattern: the grid
+walks N tiles; a VMEM scratch carries the running (B, k) best values +
+indices; each step merges the tile via k rounds of masked argmin
+(selection network — regular, branch-free, TPU-friendly for k ≤ 128).
+
+Complexity per tile: k·(k + bN) compares on the VPU.  For the k ≤ 64,
+bN = 512 regime of PM-LSH queries this is ≈ 37K compare-ops per tile —
+noise next to the MXU distance work it fuses behind.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["topk_kernel", "topk_smallest_pallas"]
+
+
+def topk_kernel(d_ref, ov_ref, oi_ref, accv_ref, acci_ref, *, k: int, block_n: int):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        accv_ref[...] = jnp.full_like(accv_ref, jnp.inf)
+        acci_ref[...] = jnp.zeros_like(acci_ref)
+
+    d = d_ref[...].astype(jnp.float32)  # (B, bN)
+    base = j * block_n
+    B, bN = d.shape
+    gidx = base + jax.lax.broadcasted_iota(jnp.int32, (B, bN), 1)
+
+    # merge pool = running top-k ++ tile
+    vals = jnp.concatenate([accv_ref[...], d], axis=1)  # (B, k+bN)
+    idxs = jnp.concatenate([acci_ref[...], gidx], axis=1)
+
+    def extract(s, carry):
+        vals, idxs, outv, outi = carry
+        col = jnp.argmin(vals, axis=1)  # (B,)
+        rows = jax.lax.broadcasted_iota(jnp.int32, (B,), 0)
+        v = vals[rows, col]
+        i = idxs[rows, col]
+        outv = jax.lax.dynamic_update_index_in_dim(outv, v, s, axis=1)
+        outi = jax.lax.dynamic_update_index_in_dim(outi, i, s, axis=1)
+        onehot = jax.lax.broadcasted_iota(jnp.int32, vals.shape, 1) == col[:, None]
+        vals = jnp.where(onehot, jnp.inf, vals)
+        return vals, idxs, outv, outi
+
+    outv = jnp.zeros((B, k), jnp.float32)
+    outi = jnp.zeros((B, k), jnp.int32)
+    _, _, outv, outi = jax.lax.fori_loop(
+        0, k, extract, (vals, idxs, outv, outi)
+    )
+    accv_ref[...] = outv
+    acci_ref[...] = outi
+
+    @pl.when(j == pl.num_programs(0) - 1)
+    def _emit():
+        ov_ref[...] = accv_ref[...]
+        oi_ref[...] = acci_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+def topk_smallest_pallas(
+    d: jax.Array, k: int, *, block_n: int = 512, interpret: bool = False
+) -> tuple[jax.Array, jax.Array]:
+    """Row-wise k smallest of d (B, N), ascending. Returns (values, idx)."""
+    B, N = d.shape
+    assert k <= N, f"k={k} > N={N}"
+    bN = min(block_n, _ceil_mult(N, 128))
+    Bh = _ceil_mult(B, 8)
+    Np = _ceil_mult(N, bN)
+    dp = jnp.full((Bh, Np), jnp.inf, jnp.float32).at[:B, :N].set(d)
+    kern = functools.partial(topk_kernel, k=k, block_n=bN)
+    vals, idx = pl.pallas_call(
+        kern,
+        grid=(Np // bN,),
+        in_specs=[pl.BlockSpec((Bh, bN), lambda j: (0, j))],
+        out_specs=[
+            pl.BlockSpec((Bh, k), lambda j: (0, 0)),
+            pl.BlockSpec((Bh, k), lambda j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bh, k), jnp.float32),
+            jax.ShapeDtypeStruct((Bh, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((Bh, k), jnp.float32),
+            pltpu.VMEM((Bh, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(dp)
+    return vals[:B], idx[:B]
+
+
+def _ceil_mult(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m

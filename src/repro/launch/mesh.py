@@ -1,0 +1,44 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = ('data', 'model') — 256 chips (one v5e pod).
+Multi-pod: (2, 16, 16) = ('pod', 'data', 'model') — 512 chips.
+
+The 'model' axis carries layer-wise TP/EP collectives (ICI-local inside
+a pod); 'data'/'pod' carry batch sharding and gradient reductions (the
+'pod' hop crosses DCI, so only bandwidth-light reductions ride it).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state — dryrun.py must set XLA_FLAGS before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over the locally-available devices (tests / examples)."""
+    n = jax.device_count()
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         axis_types=_auto(2))
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """The data-parallel axes of a mesh (everything but 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def axis_size(mesh, name: str) -> int:
+    if name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]

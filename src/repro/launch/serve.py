@@ -1,0 +1,93 @@
+"""Batched serving driver: prefill a batch of requests, then decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
+        --batch 4 --prompt-len 32 --gen 16
+
+Uses the production prefill/decode steps (sharded KV caches, PM-LSH
+retrieval attention when the config enables it) on the host mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.launch.mesh import make_host_mesh
+from repro.models import model_module
+from repro.serve.serve_step import make_decode_step, make_prefill
+
+
+def serve_batch(cfg, mesh, *, batch: int, prompt_len: int, gen: int,
+                max_seq: int | None = None, seed: int = 0):
+    """Prefill + greedy decode `gen` tokens for a batch of requests."""
+    mod = model_module(cfg)
+    max_seq = max_seq or (prompt_len + gen)
+    with mesh:
+        prefill, pinfo = make_prefill(cfg, mesh, batch=batch,
+                                      seq_len=prompt_len, max_seq=max_seq)
+        decode, _ = make_decode_step(cfg, mesh, batch=batch, max_seq=max_seq)
+        params = mod.init_params(cfg, jax.random.PRNGKey(seed))
+        params = jax.device_put(params, pinfo["params"])
+
+    rng = np.random.default_rng(seed)
+    req = {"tokens": jnp.array(
+        rng.integers(0, cfg.vocab_size, (batch, prompt_len)), jnp.int32)}
+    if cfg.family == "vlm":
+        req["image_embeds"] = jnp.zeros(
+            (batch, cfg.n_image_tokens, cfg.d_model), cfg.dtype)
+    if cfg.family == "encdec":
+        req["audio_frames"] = jnp.zeros(
+            (batch, cfg.n_audio_frames, cfg.d_model), cfg.dtype)
+
+    t0 = time.perf_counter()
+    logits, caches = prefill(params, req)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+
+    out_tokens = []
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t0 = time.perf_counter()
+    for i in range(gen):
+        out_tokens.append(np.asarray(tok)[:, 0])
+        step = {"tokens": tok, "position": jnp.int32(prompt_len + i)}
+        if cfg.family == "vlm":
+            step["image_embeds"] = req["image_embeds"]
+        if cfg.family == "encdec":
+            step["audio_frames"] = req["audio_frames"]
+        logits, caches = decode(params, caches, step)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits.block_until_ready()
+    t_decode = (time.perf_counter() - t0) / max(gen, 1)
+    return {
+        "tokens": np.stack(out_tokens, axis=1),  # (batch, gen)
+        "prefill_s": t_prefill,
+        "decode_s_per_token": t_decode,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = make_host_mesh(model=args.model_parallel)
+    out = serve_batch(cfg, mesh, batch=args.batch,
+                      prompt_len=args.prompt_len, gen=args.gen)
+    print(f"{cfg.name}: prefill {out['prefill_s']*1e3:.0f} ms, "
+          f"decode {out['decode_s_per_token']*1e3:.1f} ms/token "
+          f"(batch {args.batch})")
+    print("first request tokens:", out["tokens"][0].tolist())
+
+
+if __name__ == "__main__":
+    main()

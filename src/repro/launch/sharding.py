@@ -1,0 +1,247 @@
+"""Sharding rules: params / optimizer state / caches / batches → PartitionSpec.
+
+Megatron-style TP over the 'model' axis (qkv/up column-parallel, o/down
+row-parallel, vocab-sharded embeddings, expert-parallel MoE), DP over
+('pod','data').  Every rule guards divisibility: a dimension that does
+not divide by the axis size is replicated instead (GSPMD remains
+correct; the dry-run memory report shows the cost).
+
+The rules are NAME-BASED over the param pytree paths, with stacked
+scan-over-layers leading dims detected by rank and skipped with None.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import axis_size, dp_axes
+
+# base (unstacked) rank and sharding template per param name:
+#   (rank, [dim_rules...]) where a dim rule is  None | "model:<axis#>"
+_RULES: dict[str, tuple[int, tuple[str | None, ...]]] = {
+    # embeddings
+    "embed": (2, ("model", None)),
+    "lm_head": (2, (None, "model")),
+    # attention
+    "wq": (2, (None, "model")),
+    "wk": (2, (None, "model")),
+    "wv": (2, (None, "model")),
+    "wo": (2, ("model", None)),
+    "lsh_a": (2, (None, None)),
+    # mlps
+    "w_gate": (2, (None, "model")),
+    "w_up": (2, (None, "model")),
+    "w_down": (2, ("model", None)),
+    "w_in": (2, (None, "model")),
+    "w_out": (2, ("model", None)),
+    # moe (batched expert weights; leading dim = experts → EP)
+    "router": (2, (None, None)),
+    "moe/w_gate": (3, ("model", None, None)),
+    "moe/w_up": (3, ("model", None, None)),
+    "moe/w_down": (3, ("model", None, None)),
+    # rg-lru
+    "w_y": (2, (None, "model")),
+    "w_x": (2, (None, "model")),
+    "conv_w": (2, (None, "model")),
+    "w_a": (3, ("model", None, None)),
+    "w_i": (3, ("model", None, None)),
+    "lam": (1, ("model",)),
+    # xlstm
+    "w_z": (2, (None, "model")),
+    "w_q": (2, (None, "model")),
+    "w_f": (2, (None, None)),
+    "b_f": (1, (None,)),
+    "b_i": (1, (None,)),
+    "w_o": (2, (None, "model")),
+    # norms
+    "ln1": (1, (None,)),
+    "ln2": (1, (None,)),
+    "ln3": (1, (None,)),
+    "lnx": (1, (None,)),
+    "final_norm": (1, (None,)),
+    "enc_norm": (1, (None,)),
+}
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return out
+
+
+def _param_rule(path, leaf) -> P:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    # disambiguate MoE batched expert mats from dense mats by rank
+    key = name
+    if name in ("w_gate", "w_up", "w_down") and "moe" in names and leaf.ndim >= 3:
+        key = f"moe/{name}"
+    if name in ("w_i",) and leaf.ndim >= 2 and "mlstm" in names:
+        key = "w_f"  # xlstm input gate (d, H) — replicate
+    rule = _RULES.get(key)
+    if rule is None:
+        return P()
+    rank, dims = rule
+    extra = leaf.ndim - rank  # stacked scan dims
+    if extra < 0:
+        return P()
+    return P(*([None] * extra), *dims)
+
+
+def _respect_divisibility(spec: P, shape, mesh) -> P:
+    out = []
+    for dim, rule in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if rule is None:
+            out.append(None)
+        else:
+            size = axis_size(mesh, rule) if isinstance(rule, str) else int(
+                np.prod([axis_size(mesh, r) for r in rule])
+            )
+            out.append(rule if dim % size == 0 else None)
+    return P(*out)
+
+
+def _add_fsdp(spec: P, shape, mesh, min_size: int) -> P:
+    """ZeRO-3/FSDP: additionally shard large params over the DP axes on
+    the first free divisible dim (weights are all-gathered per layer
+    inside the scan — GSPMD inserts the gather, which overlaps with the
+    previous layer's compute under the latency-hiding scheduler)."""
+    size = 1
+    for d in shape:
+        size *= d
+    if size < min_size:
+        return spec
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([axis_size(mesh, a) for a in dp]))
+    dims = tuple(spec) + (None,) * (len(shape) - len(spec))
+    # skip dim 0 for stacked layer params (n_units rarely divides dp)
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if dims[i] is None and shape[i] % dp_size == 0:
+            new = list(dims)
+            new[i] = dp
+            return P(*new)
+    return spec
+
+
+def param_pspecs(abstract_params: Any, mesh, *, fsdp: bool = False,
+                 fsdp_min_size: int = 1 << 20) -> Any:
+    """PartitionSpec tree matching the (abstract) param tree."""
+
+    def rule(path, leaf):
+        spec = _respect_divisibility(_param_rule(path, leaf), leaf.shape, mesh)
+        if fsdp:
+            spec = _add_fsdp(spec, leaf.shape, mesh, fsdp_min_size)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_params)
+
+
+def param_shardings(abstract_params: Any, mesh, *, fsdp: bool = False) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        param_pspecs(abstract_params, mesh, fsdp=fsdp),
+    )
+
+
+# ---------------------------------------------------------------------------
+# batches
+# ---------------------------------------------------------------------------
+
+
+def batch_pspecs(batch_specs: dict, mesh) -> dict:
+    """tokens/labels (B,S): shard B over DP axes; modality embeds too.
+    Scalars replicate.  Falls back to replication if B doesn't divide."""
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([axis_size(mesh, a) for a in dp]))
+
+    def rule(name, leaf):
+        if leaf.ndim == 0:
+            return P()
+        b = leaf.shape[0]
+        lead = dp if b % dp_size == 0 else None
+        return P(lead, *([None] * (leaf.ndim - 1)))
+
+    return {k: rule(k, v) for k, v in batch_specs.items()}
+
+
+def batch_shardings(batch_specs: dict, mesh) -> dict:
+    return {
+        k: NamedSharding(mesh, s) for k, s in batch_pspecs(batch_specs, mesh).items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# KV caches / recurrent state
+# ---------------------------------------------------------------------------
+
+
+def cache_pspecs(cache_specs_tree: Any, mesh, *, batch: int, max_seq: int) -> Any:
+    """Cache sharding: batch over DP when divisible; otherwise shard the
+    SEQUENCE dim over 'data' (long_500k: batch=1, 500k keys spread across
+    the pod — the distributed PM-LSH layout); heads/width over 'model'."""
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([axis_size(mesh, a) for a in dp]))
+    model = axis_size(mesh, "model")
+    data = axis_size(mesh, "data")
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        shape = leaf.shape
+        stacked = 1 if "unit" in names else 0  # scan-stacked leading dim
+        s: list = [None] * leaf.ndim
+        if name in ("k", "v", "pk", "ck", "cv"):
+            # (stack?, B, S, KV, hd|m)
+            B, S = shape[-4], shape[-3]
+            seq_sharded = False
+            seq_uses_model = False
+            if B % dp_size == 0:
+                s[-4] = dp
+            elif S % (data * model) == 0:
+                # long_500k: batch=1 → shard the KEY SEQUENCE over BOTH
+                # mesh axes (the distributed PM-LSH index layout; the
+                # tournament merge runs over the combined axis)
+                s[-3] = ("data", "model")
+                seq_sharded = seq_uses_model = True
+            elif S % data == 0:
+                s[-3] = "data"
+                seq_sharded = True
+            if shape[-2] % model == 0 and not seq_uses_model:
+                s[-2] = "model"
+            elif shape[-1] % model == 0 and not seq_sharded:
+                # hd-sharding is free memory-wise but forces full-cache
+                # gathers at use; with a seq-sharded cache the sharded
+                # LSH tournament needs hd intact per shard (same bytes:
+                # S/16 × hd ≡ S × hd/16), so keep hd replicated there.
+                s[-1] = "model"
+            return P(*s)
+        if name in ("h", "conv", "C", "n", "c"):
+            # recurrent state: batch dim sits right after the stack dim
+            bdim = stacked
+            if shape[bdim] % dp_size == 0:
+                s[bdim] = dp
+            if shape[-1] % model == 0 and name in ("h", "conv"):
+                s[-1] = "model"  # rg-lru width is model-sharded
+            return P(*s)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, cache_specs_tree)
+
+
+def cache_shardings(cache_specs_tree: Any, mesh, *, batch: int, max_seq: int) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        cache_pspecs(cache_specs_tree, mesh, batch=batch, max_seq=max_seq),
+    )
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,176 @@
+"""Fault-tolerant training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+        --steps 200 --ckpt-dir /tmp/ckpt
+
+Production behaviors (all unit-tested in tests/test_fault_tolerance.py):
+  * resume from the latest COMMITted checkpoint on (re)start;
+  * async checkpointing every --ckpt-every steps;
+  * NaN/divergence guard: a non-finite loss aborts the step, reloads the
+    last committed checkpoint and continues (skipping the bad batch);
+  * straggler watchdog: each step runs under a deadline of
+    max(30s, p50 × straggler_factor); a step exceeding it is re-issued
+    with the SAME deterministic batch (pipeline.py regenerates it) —
+    on a real cluster the re-issue lands on the respawned host set;
+  * elastic remesh: restore(..., shardings-of-new-mesh) reshapes the
+    checkpoint onto whatever device topology the restart sees.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.data.pipeline import Prefetcher, SyntheticTokens
+from repro.launch import checkpoint as ckpt
+from repro.launch.mesh import make_host_mesh
+from repro.models import model_module
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.train_step import make_train_step
+
+
+class TrainLoop:
+    def __init__(self, cfg, mesh, *, batch: int, seq_len: int,
+                 ckpt_dir: str | None = None, ckpt_every: int = 50,
+                 straggler_factor: float = 5.0, opt_cfg=None, seed: int = 0):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.mod = model_module(cfg)
+        import jax.numpy as jnp
+
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32),
+        }
+        if cfg.family == "vlm":
+            specs["image_embeds"] = jax.ShapeDtypeStruct(
+                (batch, cfg.n_image_tokens, cfg.d_model), cfg.dtype)
+        if cfg.family == "encdec":
+            specs["audio_frames"] = jax.ShapeDtypeStruct(
+                (batch, cfg.n_audio_frames, cfg.d_model), cfg.dtype)
+        with mesh:
+            self.step_fn, self.info = make_train_step(
+                cfg, mesh, batch_specs=specs, opt_cfg=opt_cfg, donate=False
+            )
+        self.data = SyntheticTokens(cfg.vocab_size, batch, seq_len, seed=seed)
+        self.batch_extras = {
+            k: np.zeros(v.shape, "float32") for k, v in specs.items()
+            if k not in ("tokens", "labels")
+        }
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.straggler_factor = straggler_factor
+        self.checkpointer = (
+            ckpt.AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
+        )
+        self.step_times: list[float] = []
+        self.restarts = 0
+        self.stragglers = 0
+
+    # -- state ------------------------------------------------------------
+
+    def init_state(self, seed: int = 0):
+        with self.mesh:
+            params = self.mod.init_params(self.cfg, jax.random.PRNGKey(seed))
+            params = jax.device_put(params, self.info["params"])
+            opt = jax.device_put(init_opt_state(params), self.info["opt"])
+        return params, opt, 0
+
+    def try_resume(self, params, opt):
+        if not self.ckpt_dir:
+            return params, opt, 0
+        latest = ckpt.latest_step(self.ckpt_dir)
+        if latest is None:
+            return params, opt, 0
+        state, extra = ckpt.restore(
+            self.ckpt_dir, latest, {"params": params, "opt": opt},
+            shardings={"params": self.info["params"], "opt": self.info["opt"]},
+        )
+        self.restarts += 1
+        return state["params"], state["opt"], int(extra.get("step", latest))
+
+    # -- stepping ---------------------------------------------------------
+
+    def _deadline(self) -> float:
+        if not self.step_times:
+            return 600.0
+        return max(30.0, float(np.median(self.step_times)) * self.straggler_factor)
+
+    def run(self, steps: int, log_every: int = 10) -> dict:
+        params, opt, start = self.init_state()
+        params, opt, start = self.try_resume(params, opt)
+        pf = Prefetcher(self.data, start_step=start)
+        losses = []
+        try:
+            step = start
+            while step < steps:
+                got_step, batch = pf.get()
+                batch = dict(batch, **self.batch_extras)
+                t0 = time.time()
+                params2, opt2, metrics = self.step_fn(params, opt, batch)
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                if not np.isfinite(loss):
+                    # divergence guard: reload last good state, skip batch
+                    if self.ckpt_dir and ckpt.latest_step(self.ckpt_dir) is not None:
+                        params, opt, _ = self.try_resume(params, opt)
+                    step += 1
+                    continue
+                if dt > self._deadline():
+                    # straggler: deterministic re-issue of the same batch
+                    self.stragglers += 1
+                    params2, opt2, metrics = self.step_fn(params, opt, batch)
+                params, opt = params2, opt2
+                self.step_times.append(dt)
+                losses.append(loss)
+                if self.checkpointer and (step + 1) % self.ckpt_every == 0:
+                    self.checkpointer.save(
+                        step + 1, {"params": params, "opt": opt},
+                        extra={"step": step + 1},
+                    )
+                if log_every and step % log_every == 0:
+                    print(f"step {step:5d} loss {loss:.4f} "
+                          f"({dt*1e3:.0f} ms)", flush=True)
+                step += 1
+        finally:
+            pf.close()
+            if self.checkpointer:
+                self.checkpointer.wait()
+        return {
+            "losses": losses,
+            "final_loss": losses[-1] if losses else float("nan"),
+            "restarts": self.restarts,
+            "stragglers": self.stragglers,
+            "params": params,
+            "opt": opt,
+        }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = make_host_mesh(model=args.model_parallel)
+    loop = TrainLoop(cfg, mesh, batch=args.batch, seq_len=args.seq_len,
+                     ckpt_dir=args.ckpt_dir or None,
+                     ckpt_every=args.ckpt_every)
+    out = loop.run(args.steps)
+    print(f"final loss {out['final_loss']:.4f} over {len(out['losses'])} steps "
+          f"(restarts={out['restarts']}, stragglers={out['stragglers']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Model zoo: unified decoder LM + whisper enc-dec + building blocks."""
+from . import layers, lsh_attention, moe, recurrent, transformer, whisper, xlstm  # noqa: F401
+
+
+def model_module(cfg):
+    """Dispatch: which module implements this config's family."""
+    from . import transformer, whisper
+
+    return whisper if cfg.family == "encdec" else transformer

@@ -1,0 +1,130 @@
+"""Flash-attention with a custom VJP (pure JAX, chunked online softmax).
+
+WHY (hillclimb iteration 1, EXPERIMENTS.md §Perf): differentiating the
+plain chunked-attention scan makes jax save every chunk's probability
+matrix p (B,Sq,KV,G,ck) and accumulator for the backward —
+nk·B·Sq·H·ck·4 bytes ≈ 17 GB/device for deepseek-67b train_4k.  The
+flash backward stores only (out, m, l) per query (the softmax stats)
+and RECOMPUTES p chunk-by-chunk from q,k while accumulating dq/dk/dv:
+peak attention memory drops from O(Sq·Sk) to O(Sq·chunk), at the cost
+of one extra score matmul in the backward (≈ +30% attention FLOPs,
+≈ +4% of total step FLOPs at S = 4k).
+
+Used on the TRAIN path (no KV cache, static offsets); serving keeps the
+plain chunked path (it is never differentiated).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _chunks(x, nk, ck):
+    # (B, Sk, KV, hd) -> (nk, B, ck, KV, hd)
+    B, Sk, KV, hd = x.shape
+    return x.reshape(B, nk, ck, KV, hd).transpose(1, 0, 2, 3, 4)
+
+
+def _mask_for(qpos, kpos, causal: bool, window: int):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window:
+        m &= qpos[:, None] - kpos[None, :] < window
+    return m
+
+
+def _forward(q, k, v, causal: bool, window: int, chunk: int):
+    """Returns (out (B,Sq,KV,G,hd) f32, m, l) — the flash statistics."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    scale = hd**-0.5
+    qr = (q.astype(jnp.float32) * scale).reshape(B, Sq, KV, G, hd)
+    ck = min(chunk, Sk)
+    nk = Sk // ck
+    assert Sk % ck == 0, f"Sk={Sk} % chunk={ck}"
+    kc, vc = _chunks(k, nk, ck), _chunks(v, nk, ck)
+    qpos = jnp.arange(Sq)
+
+    def body(carry, inp):
+        acc, m, l = carry
+        kb, vb, ci = inp
+        kpos = ci * ck + jnp.arange(ck)
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qr, kb.astype(jnp.float32))
+        mask = _mask_for(qpos, kpos, causal, window)
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p, vb.astype(jnp.float32))
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((B, Sq, KV, G, hd), jnp.float32)
+    m0 = jnp.full((B, Sq, KV, G), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, G), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0),
+                                  (kc, vc, jnp.arange(nk)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out, m, l
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    chunk: int = 1024):
+    """q (B,Sq,H,hd), k/v (B,Sk,KV,hd) → (B,Sq,H,hd), GQA-aware."""
+    out, _, _ = _forward(q, k, v, causal, window, chunk)
+    B, Sq, KV, G, hd = out.shape
+    return out.reshape(B, Sq, KV * G, hd).astype(q.dtype)
+
+
+def _fwd(q, k, v, causal, window, chunk):
+    out, m, l = _forward(q, k, v, causal, window, chunk)
+    B, Sq, KV, G, hd = out.shape
+    primal = out.reshape(B, Sq, KV * G, hd).astype(q.dtype)
+    return primal, (q, k, v, out, m, l)
+
+
+def _bwd(causal, window, chunk, res, dout):
+    q, k, v, out, m, l = res
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    scale = hd**-0.5
+    qr = (q.astype(jnp.float32) * scale).reshape(B, Sq, KV, G, hd)
+    do = dout.astype(jnp.float32).reshape(B, Sq, KV, G, hd)
+    # logsumexp per query + delta = Σ dout·out  (the flash-bwd invariants)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))  # (B,Sq,KV,G)
+    delta = jnp.sum(do * out, -1)  # (B,Sq,KV,G)
+    ck = min(chunk, Sk)
+    nk = Sk // ck
+    kc, vc = _chunks(k, nk, ck), _chunks(v, nk, ck)
+    qpos = jnp.arange(Sq)
+
+    def body(dq, inp):
+        kb, vb, ci = inp
+        kpos = ci * ck + jnp.arange(ck)
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qr, kb.astype(jnp.float32))
+        mask = _mask_for(qpos, kpos, causal, window)
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+        p = jnp.exp(s - lse[..., None])  # recomputed probabilities
+        dv = jnp.einsum("bqkgc,bqkgd->bckd", p, do)
+        dp = jnp.einsum("bqkgd,bckd->bqkgc", do, vb.astype(jnp.float32))
+        ds = p * (dp - delta[..., None])
+        dq = dq + jnp.einsum("bqkgc,bckd->bqkgd", ds, kb.astype(jnp.float32))
+        dk = jnp.einsum("bqkgc,bqkgd->bckd", ds, qr)
+        return dq, (dk, dv)
+
+    dq0 = jnp.zeros((B, Sq, KV, G, hd), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (kc, vc, jnp.arange(nk)))
+    dq = (dq * scale).reshape(B, Sq, H, hd).astype(q.dtype)
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, Sk, KV, hd).astype(k.dtype)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, Sk, KV, hd).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_fwd, _bwd)

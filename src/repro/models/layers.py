@@ -1,0 +1,308 @@
+"""Foundational transformer layers (pure-functional JAX).
+
+Everything here is init/apply style: `init_*` builds a param pytree,
+`*_apply` is a pure function of (params, activations).  The transformer
+stacks these with `lax.scan` over stacked layer params (transformer.py).
+
+Memory-critical choice: attention is CHUNKED (online-softmax over KV
+blocks, flash-attention recurrence in pure JAX) so the (Sq × Sk) score
+matrix never materializes — required for the 32k-prefill dry-run cells
+to fit HBM, and it is what a production system would run.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Initializer = jax.nn.initializers.Initializer
+
+# ---------------------------------------------------------------------------
+# basics
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float = 1.0):
+    std = scale * (d_in**-0.5)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * weight.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Apply RoPE.  x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freq  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]  # (B, S, 1, half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) attention
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Sk, KV, hd)
+    v: jax.Array,  # (B, Sk, KV, hd)
+    *,
+    causal: bool = True,
+    q_offset: jax.Array | int = 0,
+    window: int = 0,
+    kv_len: jax.Array | int | None = None,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention over KV chunks; O(Sq·chunk) live memory.
+
+    q_offset: global position of q[0] (for decode with a cache).
+    window:   sliding-window size (0 = unlimited) — local attention.
+    kv_len:   #valid cache rows (decode masks the not-yet-written tail).
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    scale = hd**-0.5
+    qr = (q * scale).reshape(B, Sq, KV, G, hd)
+    qpos = q_offset + jnp.arange(Sq)  # (Sq,)
+
+    chunk = min(chunk, Sk)
+    nk = -(-Sk // chunk)
+    pad = nk * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, nk, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+
+    acc0 = jnp.zeros((B, Sq, KV, G, hd), jnp.float32)
+    m0 = jnp.full((B, Sq, KV, G), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, G), jnp.float32)
+    limit = Sk if kv_len is None else kv_len
+
+    def body(carry, inp):
+        acc, m, l = carry
+        kb, vb, ci = inp  # (B, ck, KV, hd) ×2, chunk index
+        kpos = ci * chunk + jnp.arange(chunk)  # (ck,)
+        s = jnp.einsum(
+            "bqkgd,bckd->bqkgc", qr.astype(jnp.float32), kb.astype(jnp.float32)
+        )  # (B, Sq, KV, G, ck)
+        mask = kpos[None, :] < limit  # (1, ck) valid rows
+        if causal:
+            mask = mask & (qpos[:, None] >= kpos[None, :])
+        if window:
+            mask = mask & (qpos[:, None] - kpos[None, :] < window)
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p, vb.astype(jnp.float32)
+        )
+        return (acc_new, m_new, l_new), None
+
+    (acc, _, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0), (kc, vc, jnp.arange(nk))
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA self-attention block
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg, dtype=None) -> dict:
+    dtype = dtype or cfg.dtype
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, dtype),
+    }
+    if cfg.lsh_attention:
+        # PM-LSH projection matrix for retrieval attention (fixed, not
+        # trained — the paper's 2-stable family; stored per-layer so the
+        # stacked scan carries it alongside the weights)
+        p["lsh_a"] = jax.random.normal(
+            jax.random.fold_in(key, 7), (hd, cfg.lsh_m), jnp.float32
+        ).astype(dtype)
+    return p
+
+
+def attention_apply(
+    p: dict,
+    x: jax.Array,  # (B, S, d)
+    cfg,
+    *,
+    positions: jax.Array,  # (S,) global positions of x
+    cache: dict | None = None,  # {"k","v"[,"pk"]}: (B, Smax, KV, ·)
+    cache_index: jax.Array | int = 0,  # write offset into the cache
+    window: int = 0,
+    use_lsh: bool = False,
+    causal: bool = True,
+    lsh_shard: tuple | None = None,  # (mesh, axis) when KV seq is sharded
+) -> tuple[jax.Array, dict | None]:
+    """Self-attention with optional KV cache and PM-LSH retrieval path.
+
+    Returns (out, updated_cache).
+    """
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, KV, hd)
+    v = (x @ p["wv"]).reshape(B, S, KV, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        if lsh_shard is not None:
+            # seq-sharded cache: the (B,1,KV,hd) update value arrives
+            # model-sharded from the TP qkv projections; replicating it
+            # here (≈1 KB) stops GSPMD resharding the whole 30+ MB cache
+            # buffer at every layer (§Perf iteration 5 fix-up).
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            rep = NamedSharding(lsh_shard[0], PartitionSpec())
+            k = jax.lax.with_sharding_constraint(k, rep)
+            v = jax.lax.with_sharding_constraint(v, rep)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_index, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_index, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        if "pk" in cache:  # PM-LSH projected keys ride along in the cache
+            pk_new = jnp.einsum("bskd,dm->bskm", k, p["lsh_a"],
+                                preferred_element_type=jnp.float32
+                                ).astype(k.dtype)
+            new_cache["pk"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["pk"], pk_new, cache_index, axis=1
+            )
+        if lsh_shard is not None:
+            # pin the updated buffers to the cache layout so GSPMD never
+            # reshards the big carries between layers
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            ax = lsh_shard[1]
+            seq_spec = NamedSharding(
+                lsh_shard[0], PartitionSpec(None, ax, None, None)
+            )
+            new_cache = {
+                kk: jax.lax.with_sharding_constraint(vv, seq_spec)
+                for kk, vv in new_cache.items()
+            }
+        k_all, v_all = ck, cv
+        kv_len = cache_index + S
+    else:
+        k_all, v_all = k, v
+        kv_len = None
+
+    if use_lsh and cache is not None and S == 1:
+        from .lsh_attention import (
+            lsh_decode_attention,
+            lsh_decode_attention_sharded,
+        )
+
+        if lsh_shard is not None:
+            out = lsh_decode_attention_sharded(
+                q, new_cache["k"], new_cache["v"], new_cache["pk"],
+                p["lsh_a"], kv_len=kv_len, topk=cfg.lsh_topk,
+                mesh=lsh_shard[0], axis=lsh_shard[1],
+            )
+        else:
+            out = lsh_decode_attention(
+                q, new_cache["k"], new_cache["v"], new_cache["pk"],
+                p["lsh_a"], kv_len=kv_len, topk=cfg.lsh_topk,
+            )
+    elif cache is None and k_all.shape[1] % min(1024, k_all.shape[1]) == 0:
+        # TRAIN path: flash custom-VJP — O(Sq·chunk) backward memory
+        from .flash_attention import flash_attention
+
+        out = flash_attention(q, k_all, v_all, causal, window)
+    else:
+        out = chunked_attention(
+            q, k_all, v_all,
+            causal=causal,
+            q_offset=positions[0],
+            window=window,
+            kv_len=kv_len,
+        )
+    return out.reshape(B, S, H * hd) @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# cross-attention block (VLM image layers / whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def init_cross_attention(key, cfg, dtype=None) -> dict:
+    dtype = dtype or cfg.dtype
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, dtype),
+    }
+
+
+def cross_attention_apply(p: dict, x: jax.Array, memory: jax.Array, cfg):
+    """x: (B, S, d) queries; memory: (B, M, d) precomputed modality tokens."""
+    B, S, _ = x.shape
+    M = memory.shape[1]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (memory @ p["wk"]).reshape(B, M, KV, hd)
+    v = (memory @ p["wv"]).reshape(B, M, KV, hd)
+    out = chunked_attention(q, k, v, causal=False)
+    return out.reshape(B, S, H * hd) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_swiglu(key, d: int, ff: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d, ff, dtype),
+        "w_up": dense_init(ks[1], d, ff, dtype),
+        "w_down": dense_init(ks[2], ff, d, dtype),
+    }
+
+
+def swiglu_apply(p: dict, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def init_gelu_mlp(key, d: int, ff: int, dtype) -> dict:
+    ks = jax.random.split(key, 2)
+    return {"w_in": dense_init(ks[0], d, ff, dtype),
+            "w_out": dense_init(ks[1], ff, d, dtype)}
+
+
+def gelu_mlp_apply(p: dict, x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x @ p["w_in"]) @ p["w_out"]

@@ -1,0 +1,99 @@
+"""Mixture-of-Experts layer: top-k routing, shared experts, EP sharding.
+
+Dispatch is the capacity-based static-shape scheme (Switch/GShard
+style): tokens are scattered into a (E, capacity, d) buffer via
+position-in-expert indices, expert FFNs run as one batched einsum over
+the expert dim (sharded over the 'model' mesh axis = expert parallel),
+and outputs are gathered back weighted by router probabilities.
+
+Experts are padded up to a multiple of the mesh 'model' size (config
+`padded_experts`); padding experts get -inf router logits so no token
+ever routes to them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, init_swiglu, swiglu_apply
+
+
+def init_moe(key, cfg, dtype=None) -> dict:
+    dtype = dtype or cfg.dtype
+    d = cfg.d_model
+    ffe = cfg.moe_d_ff or cfg.d_ff
+    E = cfg.padded_experts()
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, E, jnp.float32),
+        # batched expert weights: (E, d, ffe) / (E, ffe, d)
+        "w_gate": _expert_init(ks[1], E, d, ffe, dtype),
+        "w_up": _expert_init(ks[2], E, d, ffe, dtype),
+        "w_down": _expert_init(ks[3], E, ffe, d, dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_swiglu(
+            ks[4], d, ffe * cfg.n_shared_experts, dtype
+        )
+    return p
+
+
+def _expert_init(key, e, d_in, d_out, dtype):
+    std = d_in**-0.5
+    return (jax.random.normal(key, (e, d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+def moe_apply(p: dict, x: jax.Array, cfg) -> jax.Array:
+    """x: (B, S, d) → (B, S, d)."""
+    B, S, d = x.shape
+    T = B * S
+    E = p["router"].shape[1]
+    k = cfg.n_experts_per_token
+    cap = _capacity(T, cfg.n_experts, k, cfg.capacity_factor)
+
+    xt = x.reshape(T, d)
+    logits = xt.astype(jnp.float32) @ p["router"]  # (T, E)
+    # mask padding experts (beyond the real expert count)
+    if E > cfg.n_experts:
+        pad_mask = jnp.arange(E) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    gates, eidx = jax.lax.top_k(logits, k)  # (T, k)
+    gates = jax.nn.softmax(gates, axis=-1)
+
+    # position-in-expert: rank each (token, slot) assignment within its
+    # expert by flat order; drop overflow beyond capacity
+    onehot = jax.nn.one_hot(eidx, E, dtype=jnp.int32)  # (T, k, E)
+    flat = onehot.reshape(T * k, E)
+    pos_in_e = jnp.cumsum(flat, axis=0) - 1  # (T·k, E)
+    pos = jnp.sum(pos_in_e * flat, axis=1).reshape(T, k)  # (T, k)
+    keep = pos < cap
+    slot = jnp.where(keep, eidx * cap + pos, E * cap)  # overflow → scratch row
+
+    # scatter tokens into the (E·cap, d) dispatch buffer (+1 scratch row)
+    buf = jnp.zeros((E * cap + 1, d), x.dtype)
+    buf = buf.at[slot.reshape(-1)].add(
+        jnp.repeat(xt, k, axis=0).reshape(T * k, d)
+        * keep.reshape(T * k, 1).astype(x.dtype)
+    )
+    eb = buf[: E * cap].reshape(E, cap, d)
+
+    # expert FFNs: batched over the (sharded) expert dim
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", eb, p["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", eb, p["w_up"]
+    )
+    eo = jnp.einsum("ecf,efd->ecd", h, p["w_down"])  # (E, cap, d)
+    eo = jnp.concatenate([eo.reshape(E * cap, d), jnp.zeros((1, d), eo.dtype)])
+
+    # gather back, weight by gates
+    out = jnp.sum(
+        eo[slot] * (gates * keep).astype(eo.dtype)[..., None], axis=1
+    )  # (T, d)
+
+    if "shared" in p:
+        out = out + swiglu_apply(p["shared"], xt)
+    return out.reshape(B, S, d)
+
+
+def _capacity(tokens: int, n_experts: int, k: int, factor: float) -> int:
+    cap = int(tokens * k * factor / max(n_experts, 1))
+    return max(cap, 4)

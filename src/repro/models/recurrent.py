@@ -1,0 +1,122 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The hybrid architecture interleaves two recurrent blocks per local-
+attention block ("rec","rec","local").  The recurrence
+
+    h_t = a_t ⊙ h_{t-1} + √(1−a_t²) ⊙ (i_t ⊙ u_t),
+    a_t = exp(−c·softplus(Λ) ⊙ σ(r_t))
+
+is a linear scan, so training uses `jax.lax.associative_scan`
+(log-depth, TPU-friendly) and decode carries (h, conv-tail) state —
+this is the native sub-quadratic path for the long_500k cells.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+_C = 8.0  # Griffin's fixed scale on the softplus recurrence gate
+
+
+def init_rglru_block(key, cfg, dtype=None) -> dict:
+    dtype = dtype or cfg.dtype
+    d = cfg.d_model
+    rw = cfg.rnn_width or d
+    ks = jax.random.split(key, 7)
+    # Λ init so that a ∈ (0.9, 0.999) at σ(r)=0.5 (Griffin appendix)
+    lam_init = jax.random.uniform(ks[0], (rw,), jnp.float32, 0.9**2, 0.999**2)
+    lam = jnp.log(jnp.expm1(-jnp.log(lam_init) / _C))  # softplus⁻¹
+    # gates are BLOCK-DIAGONAL (recurrentgemma's BlockDiagonalLinear,
+    # n_blocks = n_heads) — element-group-local, so the whole recurrence
+    # shards cleanly over the 'model' axis
+    nb = cfg.n_heads
+    bs = rw // nb
+    std = bs**-0.5
+    return {
+        "w_y": dense_init(ks[1], d, rw, dtype),  # gate branch
+        "w_x": dense_init(ks[2], d, rw, dtype),  # recurrence branch
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv1d_width, rw), jnp.float32)
+                   * 0.1).astype(dtype),
+        "w_a": (jax.random.normal(ks[4], (nb, bs, bs), jnp.float32) * std
+                ).astype(dtype),  # recurrence gate r_t
+        "w_i": (jax.random.normal(ks[5], (nb, bs, bs), jnp.float32) * std
+                ).astype(dtype),  # input gate i_t
+        "lam": lam,  # (rw,) f32
+        "w_out": dense_init(ks[6], rw, d, dtype),
+    }
+
+
+def _block_diag_apply(u: jax.Array, w: jax.Array) -> jax.Array:
+    """u: (B, S, rw); w: (nb, bs, bs) block-diagonal → (B, S, rw)."""
+    B, S, rw = u.shape
+    nb, bs, _ = w.shape
+    return jnp.einsum(
+        "bsnk,nkj->bsnj", u.reshape(B, S, nb, bs), w
+    ).reshape(B, S, rw)
+
+
+def _causal_conv1d(u: jax.Array, w: jax.Array, tail: jax.Array | None):
+    """Depthwise causal conv. u: (B, S, rw); w: (W, rw); tail: (B, W-1, rw)."""
+    W = w.shape[0]
+    if tail is None:
+        up = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        up = jnp.concatenate([tail.astype(u.dtype), u], axis=1)
+    out = sum(
+        up[:, i : i + u.shape[1], :] * w[i][None, None, :] for i in range(W)
+    )
+    return out, up[:, -(W - 1) :, :]  # (conv output, new tail)
+
+
+def _rglru_scan(u: jax.Array, r: jax.Array, i: jax.Array, lam: jax.Array,
+                h0: jax.Array | None):
+    """u,r,i: (B, S, rw) → h: (B, S, rw) via associative scan."""
+    a = jnp.exp(
+        -_C * jax.nn.softplus(lam)[None, None, :] * jax.nn.sigmoid(
+            r.astype(jnp.float32))
+    )  # (B, S, rw)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        jax.nn.sigmoid(i.astype(jnp.float32)) * u.astype(jnp.float32)
+    )
+    if h0 is not None:  # fold the carried state into step 0
+        gated = gated.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h  # f32
+
+
+def rglru_block_apply(
+    p: dict,
+    x: jax.Array,  # (B, S, d)
+    cfg,
+    state: dict | None = None,  # {"h": (B, rw), "conv": (B, W-1, rw)}
+) -> tuple[jax.Array, dict | None]:
+    """Griffin recurrent block. Returns (out, new_state)."""
+    y = jax.nn.gelu(x @ p["w_y"])  # gate branch
+    u = x @ p["w_x"]
+    tail = state["conv"] if state is not None else None
+    u, new_tail = _causal_conv1d(u, p["conv_w"], tail)
+    r = _block_diag_apply(u, p["w_a"])
+    i = _block_diag_apply(u, p["w_i"])
+    h0 = state["h"] if state is not None else None
+    h = _rglru_scan(u, r, i, p["lam"], h0)
+    out = (y.astype(jnp.float32) * h).astype(x.dtype) @ p["w_out"]
+    new_state = None
+    if state is not None:
+        new_state = {"h": h[:, -1, :].astype(state["h"].dtype), "conv": new_tail}
+    return out, new_state
+
+
+def rglru_state_specs(cfg, batch: int):
+    rw = cfg.rnn_width or cfg.d_model
+    return {
+        "h": jax.ShapeDtypeStruct((batch, rw), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv1d_width - 1, rw), cfg.dtype),
+    }

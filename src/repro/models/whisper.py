@@ -1,0 +1,186 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The conv/mel frontend is a STUB per the assignment: `input_specs()`
+delivers precomputed frame embeddings (B, n_audio_frames, d_model); the
+encoder is a bidirectional transformer over those frames, the decoder a
+causal transformer with per-layer cross-attention.  Decode caches both
+the self-attention KV and the (computed-once) cross-attention KV.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+def _init_enc_layer(key, cfg):
+    ks = jax.random.split(key, 2)
+    ln = jnp.ones((cfg.d_model,), jnp.float32)
+    return {"ln1": ln, "attn": L.init_attention(ks[0], cfg), "ln2": ln,
+            "mlp": L.init_gelu_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.dtype)}
+
+
+def _init_dec_layer(key, cfg):
+    ks = jax.random.split(key, 3)
+    ln = jnp.ones((cfg.d_model,), jnp.float32)
+    return {"ln1": ln, "attn": L.init_attention(ks[0], cfg),
+            "lnx": ln, "xattn": L.init_cross_attention(ks[1], cfg),
+            "ln2": ln, "mlp": L.init_gelu_mlp(ks[2], cfg.d_model, cfg.d_ff,
+                                              cfg.dtype)}
+
+
+def init_params(cfg, key) -> dict:
+    ks = jax.random.split(key, 5)
+    Vp = cfg.padded_vocab()
+    enc_keys = jax.random.split(ks[0], cfg.encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    enc = jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[_init_enc_layer(k, cfg) for k in enc_keys]
+    )
+    dec = jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[_init_dec_layer(k, cfg) for k in dec_keys]
+    )
+    return {
+        "embed": (jax.random.normal(ks[2], (Vp, cfg.d_model), jnp.float32)
+                  * 0.02).astype(cfg.dtype),
+        "encoder": enc,
+        "decoder": dec,
+        "enc_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": L.dense_init(ks[3], cfg.d_model, Vp, cfg.dtype),
+    }
+
+
+def abstract_params(cfg) -> Any:
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def encode(params, frames: jax.Array, cfg) -> jax.Array:
+    """frames: (B, M, d) stub embeddings → encoder memory (B, M, d)."""
+    M = frames.shape[1]
+    positions = jnp.arange(M)
+
+    def body(x, p):
+        a, _ = L.attention_apply(
+            p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+            positions=positions, cache=None, causal=False,  # bidirectional
+        )
+        x = x + a
+        x = x + L.gelu_mlp_apply(p["mlp"], L.rms_norm(x, p["ln2"], cfg.norm_eps))
+        return x, None
+
+    x, _ = jax.lax.scan(body, frames.astype(cfg.dtype), params["encoder"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_layer_apply(p, x, cfg, *, positions, cache, cache_index, memory,
+                     cross_kv=None):
+    a, nc = L.attention_apply(
+        p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+        positions=positions, cache=cache, cache_index=cache_index,
+    )
+    x = x + a
+    h = L.rms_norm(x, p["lnx"], cfg.norm_eps)
+    if cross_kv is not None:  # decode: cached cross K/V
+        B, S, _ = h.shape
+        H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        q = (h @ p["xattn"]["wq"]).reshape(B, S, H, hd)
+        out = L.chunked_attention(q, cross_kv["ck"], cross_kv["cv"], causal=False)
+        x = x + out.reshape(B, S, H * hd) @ p["xattn"]["wo"]
+    else:
+        x = x + L.cross_attention_apply(p["xattn"], h, memory, cfg)
+    x = x + L.gelu_mlp_apply(p["mlp"], L.rms_norm(x, p["ln2"], cfg.norm_eps))
+    return x, nc
+
+
+def forward(params, tokens, frames, cfg, *, caches=None, position0=0,
+            logits_slice="all"):
+    """Train/prefill path: encode frames, decode tokens."""
+    memory = encode(params, frames, cfg)
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    positions = position0 + jnp.arange(S)
+
+    def body(x, slices):
+        p, c = slices
+        x, nc = _dec_layer_apply(
+            p, x, cfg, positions=positions, cache=c, cache_index=position0,
+            memory=memory,
+        )
+        return x, nc
+
+    if caches is not None:
+        x, new_self = jax.lax.scan(body, x, (params["decoder"], caches["self"]))
+        # compute + cache the cross K/V once
+        KV, hd = cfg.n_kv_heads, cfg.head_dim
+        M = memory.shape[1]
+
+        def cross_kv(p):
+            ck = (memory @ p["xattn"]["wk"]).reshape(B, M, KV, hd)
+            cv = (memory @ p["xattn"]["wv"]).reshape(B, M, KV, hd)
+            return {"ck": ck, "cv": cv}
+
+        new_cross = jax.vmap(cross_kv)(params["decoder"])
+        new_caches = {"self": new_self, "cross": new_cross}
+    else:
+        body_nc = jax.checkpoint(
+            lambda xx, p: (body(xx, (p, None))[0], None),
+            policy=jax.checkpoint_policies.nothing_saveable,
+        )
+        x, _ = jax.lax.scan(body_nc, x, params["decoder"])
+        new_caches = None
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if logits_slice == "last":
+        x = x[:, -1:, :]
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    return logits, new_caches
+
+
+def decode_step(params, caches, batch, cfg):
+    """One decoder token; cross-attention reads the cached cross K/V."""
+    tokens, position0 = batch["tokens"], batch["position"]
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    positions = position0 + jnp.arange(S)
+
+    def body(x, slices):
+        p, c_self, c_cross = slices
+        x, nc = _dec_layer_apply(
+            p, x, cfg, positions=positions, cache=c_self,
+            cache_index=position0, memory=None, cross_kv=c_cross,
+        )
+        return x, nc
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["decoder"], caches["self"], caches["cross"])
+    )
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, -1:, :] @ params["lm_head"]).astype(jnp.float32)
+    return logits, {"self": new_self, "cross": caches["cross"]}
+
+
+def cache_specs(cfg, batch: int, max_seq: int):
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    sds = jax.ShapeDtypeStruct
+    Ld = cfg.n_layers
+    return {
+        "self": {
+            "k": sds((Ld, batch, max_seq, KV, hd), cfg.dtype),
+            "v": sds((Ld, batch, max_seq, KV, hd), cfg.dtype),
+        },
+        "cross": {
+            "ck": sds((Ld, batch, cfg.n_audio_frames, KV, hd), cfg.dtype),
+            "cv": sds((Ld, batch, cfg.n_audio_frames, KV, hd), cfg.dtype),
+        },
+    }
+
+
+def loss_fn(params, batch, cfg, **_):
+    from .transformer import cross_entropy
+
+    logits, _ = forward(params, batch["tokens"], batch["audio_frames"], cfg)
+    return cross_entropy(logits, batch["labels"], cfg.vocab_size)

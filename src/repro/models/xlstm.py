@@ -1,0 +1,197 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM.
+
+mLSTM trains in CHUNKWISE-PARALLEL form (the production formulation the
+xLSTM kernels use): within a chunk of L tokens the update is an
+attention-like dense computation; across chunks only the (H, dh, dh)
+matrix state is carried, so the backward pass stores n_chunks states
+instead of seq_len states.
+
+Numerics note (documented deviation): we use log-sigmoid forget gates
+cumulated in log space and a sigmoid input gate — the exponential-gate
+stabilizer of the paper is unnecessary under this bounded
+parameterization, and it keeps the chunkwise form simple.  DESIGN.md
+§7 records this as a changed assumption.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm_block(key, cfg, dtype=None) -> dict:
+    dtype = dtype or cfg.dtype
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], d, 2 * d, dtype),  # [rnn path | gate path]
+        "w_q": dense_init(ks[1], d, d, dtype),
+        "w_k": dense_init(ks[2], d, d, dtype),
+        "w_v": dense_init(ks[3], d, d, dtype),
+        "w_f": dense_init(ks[4], d, H, jnp.float32),  # forget gate (per head)
+        "b_f": jnp.full((H,), 3.0, jnp.float32),  # bias toward remembering
+        "w_i": dense_init(ks[5], d, H, jnp.float32),  # input gate
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "w_down": dense_init(ks[6], d, d, dtype),
+    }
+
+
+def mlstm_block_apply(
+    p: dict,
+    x: jax.Array,  # (B, S, d)
+    cfg,
+    state: dict | None = None,  # {"C": (B,H,dh,dh) f32, "n": (B,H,dh) f32}
+    chunk: int = 64,
+) -> tuple[jax.Array, dict | None]:
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+
+    up = x @ p["w_up"]
+    z, gate = jnp.split(up, 2, axis=-1)
+    q = (z @ p["w_q"]).reshape(B, S, H, dh).astype(jnp.float32) * dh**-0.5
+    k = (z @ p["w_k"]).reshape(B, S, H, dh).astype(jnp.float32) * dh**-0.5
+    v = (z @ p["w_v"]).reshape(B, S, H, dh).astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(x.astype(jnp.float32) @ p["w_f"] + p["b_f"])  # (B,S,H)
+    ig = jax.nn.sigmoid(x.astype(jnp.float32) @ p["w_i"] + p["b_i"])  # (B,S,H)
+
+    C0 = state["C"] if state is not None else jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = state["n"] if state is not None else jnp.zeros((B, H, dh), jnp.float32)
+
+    if S == 1:  # decode step — plain recurrence
+        f = jnp.exp(lf[:, 0])  # (B, H)
+        C = f[..., None, None] * C0 + ig[:, 0][..., None, None] * (
+            v[:, 0][..., :, None] * k[:, 0][..., None, :]
+        )
+        n = f[..., None] * n0 + ig[:, 0][..., None] * k[:, 0]
+        h = _readout(q[:, 0], C, n)[:, None]  # (B, 1, H, dh)
+        new_state = {"C": C, "n": n}
+    else:
+        chunk = min(chunk, S)
+        assert S % chunk == 0, f"seq {S} not divisible by mLSTM chunk {chunk}"
+        nc = S // chunk
+        qc = q.reshape(B, nc, chunk, H, dh).transpose(1, 0, 2, 3, 4)
+        kc = k.reshape(B, nc, chunk, H, dh).transpose(1, 0, 2, 3, 4)
+        vc = v.reshape(B, nc, chunk, H, dh).transpose(1, 0, 2, 3, 4)
+        lfc = lf.reshape(B, nc, chunk, H).transpose(1, 0, 2, 3)
+        igc = ig.reshape(B, nc, chunk, H).transpose(1, 0, 2, 3)
+
+        def body(carry, inp):
+            C, n = carry
+            qb, kb, vb, lfb, igb = inp  # (B, L, H, ·)
+            F = jnp.cumsum(lfb, axis=1)  # (B, L, H) log ∏ f up to t
+            Ftot = F[:, -1]  # (B, H)
+            # inter-chunk: h = C·q — C[d,e] = Σ v[d]k[e], so q contracts the
+            # k-index (e), matching the intra path's ⟨q,k⟩·v
+            h_inter = jnp.exp(F)[..., None] * jnp.einsum("blhe,bhde->blhd", qb, C)
+            n_inter = jnp.exp(F)[..., None] * n[:, None]  # (B, L, H, dh)
+            # intra-chunk: D_ts = exp(F_t − F_s)·i_s for s ≤ t
+            ldiff = F[:, :, None, :] - F[:, None, :, :]  # (B, L, L, H)
+            tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+            D = jnp.where(tri[None, :, :, None], jnp.exp(ldiff), 0.0) * igb[:, None]
+            scores = jnp.einsum("blhd,bshd->blsh", qb, kb) * D
+            h_intra = jnp.einsum("blsh,bshd->blhd", scores, vb)
+            n_intra = jnp.einsum("blsh,bshd->blhd", D, kb)
+            h = h_inter + h_intra
+            nvec = n_inter + n_intra
+            denom = jnp.maximum(
+                jnp.abs(jnp.einsum("blhd,blhd->blh", nvec, qb)), 1.0
+            )
+            out = h / denom[..., None]
+            # state update
+            gain_s = jnp.exp(Ftot[:, None] - F) * igb  # (B, L, H)
+            C_new = jnp.exp(Ftot)[..., None, None] * C + jnp.einsum(
+                "blh,blhd,blhe->bhde", gain_s, vb, kb
+            )
+            n_new = jnp.exp(Ftot)[..., None] * n + jnp.einsum(
+                "blh,blhd->bhd", gain_s, kb
+            )
+            return (C_new, n_new), out
+
+        (Cf, nf), hc = jax.lax.scan(body, (C0, n0), (qc, kc, vc, lfc, igc))
+        h = hc.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+        new_state = {"C": Cf, "n": nf} if state is not None else None
+
+    out = h.reshape(B, -1, d).astype(x.dtype) * jax.nn.silu(gate)
+    return out @ p["w_down"], new_state
+
+
+def _readout(q, C, n):
+    """q: (B,H,dh); C: (B,H,dh_v,dh_k); n: (B,H,dh_k) → (B,H,dh_v).
+
+    h = C·q contracts q with the k-index of C (C[d,e] = Σ v[d]k[e])."""
+    h = jnp.einsum("bhe,bhde->bhd", q, C)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)), 1.0)
+    return h / denom[..., None]
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm_block(key, cfg, dtype=None) -> dict:
+    dtype = dtype or cfg.dtype
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "w_z": dense_init(ks[0], d, d, dtype),
+        "w_i": dense_init(ks[1], d, d, jnp.float32),
+        "w_f": dense_init(ks[2], d, d, jnp.float32),
+        "b_f": jnp.full((d,), 3.0, jnp.float32),
+        "w_o": dense_init(ks[3], d, d, dtype),
+        "w_down": dense_init(ks[4], d, d, dtype),
+    }
+
+
+def slstm_block_apply(
+    p: dict,
+    x: jax.Array,  # (B, S, d)
+    cfg,
+    state: dict | None = None,  # {"c": (B,d) f32, "n": (B,d) f32}
+) -> tuple[jax.Array, dict | None]:
+    B, S, d = x.shape
+    z = jnp.tanh((x @ p["w_z"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(x.astype(jnp.float32) @ p["w_i"])
+    f = jax.nn.sigmoid(x.astype(jnp.float32) @ p["w_f"] + p["b_f"])
+    o = jax.nn.sigmoid((x @ p["w_o"]).astype(jnp.float32))
+
+    c0 = state["c"] if state is not None else jnp.zeros((B, d), jnp.float32)
+    n0 = state["n"] if state is not None else jnp.zeros((B, d), jnp.float32)
+
+    # linear recurrences c_t = f c_{t-1} + i z_t ; n_t = f n_{t-1} + i
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a2 * a1, a2 * b1 + b2
+
+    iz = (i * z).at[:, 0, :].add(f[:, 0] * c0) if state is not None else i * z
+    ii = i.at[:, 0, :].add(f[:, 0] * n0) if state is not None else i
+    _, c = jax.lax.associative_scan(combine, (f, iz), axis=1)
+    _, n = jax.lax.associative_scan(combine, (f, ii), axis=1)
+    h = o * c / jnp.maximum(n, 1.0)
+    new_state = None
+    if state is not None:
+        new_state = {"c": c[:, -1], "n": n[:, -1]}
+    return h.astype(x.dtype) @ p["w_down"], new_state
+
+
+def xlstm_state_specs(cfg, batch: int, kind: str):
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    if kind == "mlstm":
+        return {
+            "C": jax.ShapeDtypeStruct((batch, H, dh, dh), jnp.float32),
+            "n": jax.ShapeDtypeStruct((batch, H, dh), jnp.float32),
+        }
+    return {
+        "c": jax.ShapeDtypeStruct((batch, d), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, d), jnp.float32),
+    }

@@ -1,0 +1,107 @@
+"""Distributed serving steps: prefill (fills the KV cache) and decode
+(one token against the cache), with sharding declared per cell.
+
+decode_32k shards the cache on batch over DP; long_500k (batch=1)
+shards the KEY SEQUENCE over 'data' — each device holds S/|data| keys
+and the PM-LSH retrieval attention's estimate/top-k runs as a
+distributed candidate search (launch/sharding.cache_pspecs).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.sharding import batch_shardings, cache_shardings, param_shardings
+from repro.models import model_module
+
+
+def make_prefill(cfg, mesh, *, batch: int, seq_len: int, max_seq: int | None = None):
+    mod = model_module(cfg)
+    max_seq = max_seq or seq_len
+    aparams = mod.abstract_params(cfg)
+    p_shard = param_shardings(aparams, mesh)
+    c_specs = mod.cache_specs(cfg, batch, max_seq)
+    c_shard = cache_shardings(c_specs, mesh, batch=batch, max_seq=max_seq)
+
+    if cfg.family == "encdec":
+        def fn(params, batch_in):
+            caches = jax.tree.map(
+                lambda s: jax.numpy.zeros(s.shape, s.dtype), c_specs
+            )
+            return mod.forward(
+                params, batch_in["tokens"], batch_in["audio_frames"], cfg,
+                caches=caches, logits_slice="last",
+            )
+    else:
+        def fn(params, batch_in):
+            caches = jax.tree.map(
+                lambda s: jax.numpy.zeros(s.shape, s.dtype), c_specs
+            )
+            return mod.forward(
+                params, batch_in["tokens"], cfg, caches=caches, position0=0,
+                memory=batch_in.get("image_embeds"), logits_slice="last",
+            )
+
+    from repro.configs.base import InputShape, input_specs
+
+    shape = InputShape("prefill", seq_len, batch, "prefill")
+    b_specs = input_specs(cfg, shape)
+    b_shard = batch_shardings(b_specs, mesh)
+    logits_shard = NamedSharding(mesh, P())
+    jitted = jax.jit(
+        fn, in_shardings=(p_shard, b_shard),
+        out_shardings=(logits_shard, c_shard),
+    )
+    return jitted, {"params": p_shard, "batch": b_shard, "cache": c_shard,
+                    "abstract_params": aparams, "cache_specs": c_specs,
+                    "batch_specs": b_specs}
+
+
+def make_decode_step(cfg, mesh, *, batch: int, max_seq: int):
+    import numpy as np
+
+    from repro.launch.mesh import axis_size, dp_axes
+
+    mod = model_module(cfg)
+    aparams = mod.abstract_params(cfg)
+    p_shard = param_shardings(aparams, mesh)
+    c_specs = mod.cache_specs(cfg, batch, max_seq)
+    c_shard = cache_shardings(c_specs, mesh, batch=batch, max_seq=max_seq)
+
+    # seq-sharded cache (long-context, batch ∤ dp) → distributed PM-LSH
+    # candidate search inside attention (tournament merge, §Perf iter. 5;
+    # 2D over (data, model) when the sequence divides — iter. 6)
+    dp_size = int(np.prod([axis_size(mesh, a) for a in dp_axes(mesh)]))
+    data_sz = axis_size(mesh, "data")
+    model_sz = axis_size(mesh, "model")
+    lsh_shard = None
+    if (batch % dp_size != 0 and cfg.lsh_attention
+            and cfg.family != "encdec" and data_sz > 1):
+        if max_seq % (data_sz * model_sz) == 0:
+            lsh_shard = (mesh, ("data", "model"))
+        elif max_seq % data_sz == 0:
+            lsh_shard = (mesh, "data")
+
+    def fn(params, caches, batch_in):
+        if cfg.family == "encdec":
+            return mod.decode_step(params, caches, batch_in, cfg)
+        return mod.decode_step(params, caches, batch_in, cfg,
+                               lsh_shard=lsh_shard)
+
+    from repro.configs.base import InputShape, input_specs
+
+    shape = InputShape("decode", max_seq, batch, "decode")
+    b_specs = input_specs(cfg, shape)
+    b_shard = batch_shardings(b_specs, mesh)
+    logits_shard = NamedSharding(mesh, P())
+    jitted = jax.jit(
+        fn, in_shardings=(p_shard, c_shard, b_shard),
+        out_shardings=(logits_shard, c_shard),
+        donate_argnums=(1,),
+    )
+    return jitted, {"params": p_shard, "batch": b_shard, "cache": c_shard,
+                    "abstract_params": aparams, "cache_specs": c_specs,
+                    "batch_specs": b_specs}

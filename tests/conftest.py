@@ -1,0 +1,23 @@
+"""Shared test configuration.
+
+NOTE: do NOT set XLA_FLAGS / device-count here — smoke tests and
+benchmarks must see the real single-device CPU backend.  Only
+launch/dryrun.py forces the 512-device placeholder topology.
+"""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_clustered(n: int, d: int, n_clusters: int = 20, spread: float = 0.5,
+                   scale: float = 4.0, seed: int = 0) -> np.ndarray:
+    """Clustered Gaussian mixture — matches the 'structured' regime of the
+    paper's real datasets (low LID relative to ambient d)."""
+    r = np.random.default_rng(seed)
+    centers = r.normal(size=(n_clusters, d)) * scale
+    asg = r.integers(0, n_clusters, n)
+    return (centers[asg] + r.normal(size=(n, d)) * spread).astype(np.float32)

@@ -1,0 +1,141 @@
+"""Integration tests: (r,c)-BC and (c,k)-ANN queries (paper §5).
+
+Checks the THEOREM-1 contract (returned distance ≤ c²·r* with at least
+constant probability — empirically near-1) and agreement between the
+paper-faithful tree path and the TPU-native flat path.
+"""
+import numpy as np
+import pytest
+
+from conftest import make_clustered
+from repro.core import PMLSH, solve_parameters
+from repro.core.flat_index import ann_search, build_flat_index, candidate_budget
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    return make_clustered(3000, 48, n_clusters=30, seed=0)
+
+
+@pytest.fixture(scope="module")
+def index(dataset):
+    return PMLSH(dataset, c=1.5, m=15, seed=0)
+
+
+class TestBCQuery:
+    def test_returns_point_within_cr_or_nothing(self, index, dataset):
+        rng = np.random.default_rng(1)
+        hits = 0
+        for _ in range(20):
+            q = dataset[rng.integers(len(dataset))] + rng.normal(size=48).astype(
+                np.float32
+            ) * 0.1
+            r = 1.0
+            res, _ = index.bc_query(q, r)
+            if res is not None:
+                hits += 1
+                assert np.linalg.norm(dataset[res] - q) <= index.params.c * r * (
+                    1 + 1e-5
+                )
+        assert hits > 0  # queries near data points must mostly succeed
+
+    def test_empty_when_far(self, index, dataset):
+        q = np.full(48, 1e3, np.float32)  # far from every cluster
+        res, _ = index.bc_query(q, 0.5)
+        assert res is None
+
+
+class TestANNQuery:
+    def test_theorem1_guarantee(self, index, dataset):
+        """||q,o₁|| ≤ c²·r* must hold with ≥ 1/2 - 1/e probability
+        (empirically it holds essentially always)."""
+        rng = np.random.default_rng(2)
+        c2 = index.params.c**2
+        ok = 0
+        trials = 30
+        for _ in range(trials):
+            q = rng.normal(size=48).astype(np.float32) * 2
+            res = index.ann_query(q, k=1)
+            _, ex_d = index.exact_knn(q, 1)
+            if res.distances[0] <= c2 * ex_d[0] * (1 + 1e-5):
+                ok += 1
+        assert ok / trials >= 0.5 - 1 / np.e + 0.3  # far above the bound
+
+    def test_recall_and_ratio(self, index, dataset):
+        rng = np.random.default_rng(3)
+        recalls, ratios = [], []
+        for _ in range(15):
+            q = dataset[rng.integers(len(dataset))] + rng.normal(
+                size=48
+            ).astype(np.float32) * 0.2
+            k = 10
+            res = index.ann_query(q, k=k)
+            ex_i, ex_d = index.exact_knn(q, k)
+            recalls.append(len(set(res.indices.tolist()) & set(ex_i.tolist())) / k)
+            ratios.append(float(np.mean(res.distances / np.maximum(ex_d, 1e-9))))
+        assert np.mean(recalls) >= 0.6
+        assert np.mean(ratios) <= 1.2
+
+    def test_k_results_sorted(self, index):
+        q = np.zeros(48, np.float32)
+        res = index.ann_query(q, k=7)
+        assert res.indices.shape == (7,)
+        assert (np.diff(res.distances) >= -1e-6).all()
+
+    def test_work_is_sublinear(self, index, dataset):
+        """Candidate verification ≈ βn + k ≪ n (Theorem 2)."""
+        q = dataset[0] + 0.05
+        res = index.ann_query(q, k=5)
+        assert res.candidates_verified <= index.params.beta * index.n * 3 + 500
+
+
+class TestFlatBackend:
+    def test_flat_matches_exact_topk_quality(self, dataset):
+        fi = build_flat_index(dataset, m=15, seed=0)
+        rng = np.random.default_rng(4)
+        q = dataset[rng.integers(len(dataset))][None] + 0.1
+        idx, dist = ann_search(fi, q, k=10, c=1.5, use_kernels=False)
+        # exact
+        ex = np.argsort(np.linalg.norm(dataset - q[0], axis=-1))[:10]
+        recall = len(set(np.asarray(idx)[0].tolist()) & set(ex.tolist())) / 10
+        assert recall >= 0.7
+
+    def test_kernel_and_ref_paths_agree(self, dataset):
+        fi = build_flat_index(dataset[:500], m=15, seed=0)
+        q = dataset[:4] + 0.05
+        i_ref, d_ref = ann_search(fi, q, k=5, c=1.5, use_kernels=False)
+        i_k, d_k = ann_search(fi, q, k=5, c=1.5, use_kernels=True)
+        np.testing.assert_allclose(np.asarray(d_ref), np.asarray(d_k), rtol=1e-4)
+        assert (np.asarray(i_ref) == np.asarray(i_k)).all()
+
+    def test_candidate_budget(self):
+        p = solve_parameters(1.5, m=15)
+        assert candidate_budget(p, 1000, 10) == int(np.ceil(p.beta * 1000)) + 10
+        assert candidate_budget(p, 10, 10) == 10  # clamps to n
+
+    def test_batched_queries(self, dataset):
+        fi = build_flat_index(dataset[:800], m=15, seed=0)
+        q = dataset[:6] + 0.01
+        idx, dist = ann_search(fi, q, k=3, use_kernels=False)
+        assert idx.shape == (6, 3) and dist.shape == (6, 3)
+        assert (np.diff(np.asarray(dist), axis=1) >= -1e-5).all()
+
+
+class TestTreeVsFlatConsistency:
+    def test_same_candidates_quality(self, dataset, index):
+        """Both backends implement the same estimator; their k-NN answers
+        should agree on the vast majority of queries."""
+        fi = build_flat_index(dataset, m=15, seed=0)
+        rng = np.random.default_rng(5)
+        agree = 0
+        trials = 10
+        for _ in range(trials):
+            q = dataset[rng.integers(len(dataset))] + 0.05
+            r_tree = index.ann_query(q, k=1)
+            i_flat, _ = ann_search(fi, q[None], k=1, use_kernels=False)
+            ex_i, ex_d = index.exact_knn(q, 1)
+            t_ok = r_tree.distances[0] <= 1.5**2 * ex_d[0] + 1e-6
+            f_d = np.linalg.norm(dataset[int(np.asarray(i_flat)[0, 0])] - q)
+            f_ok = f_d <= 1.5**2 * ex_d[0] + 1e-6
+            agree += int(t_ok and f_ok)
+        assert agree >= trials * 0.8

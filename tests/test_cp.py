@@ -1,0 +1,125 @@
+"""Integration tests: (c,k)-ACP queries (paper §6)."""
+import numpy as np
+import pytest
+
+from conftest import make_clustered
+from repro.core import PMLSH_CP, calibrate_gamma
+from repro.core.cp import _TopPairs
+
+
+def _pairset(P):
+    return set(tuple(sorted(ab)) for ab in P.tolist())
+
+
+@pytest.fixture(scope="module")
+def cp_index():
+    data = make_clustered(800, 32, n_clusters=25, seed=1)
+    return PMLSH_CP(data, c=4.0, m=15, seed=0)
+
+
+@pytest.fixture(scope="module")
+def exact(cp_index):
+    return cp_index.exact_cp(k=10)
+
+
+class TestTopPairs:
+    def test_keeps_k_smallest(self):
+        tp = _TopPairs(3)
+        for d, i, j in [(5.0, 0, 1), (1.0, 2, 3), (3.0, 4, 5), (2.0, 6, 7), (9, 8, 9)]:
+            tp.push(d, i, j)
+        out = tp.sorted()
+        assert [d for d, _, _ in out] == [1.0, 2.0, 3.0]
+
+    def test_dedups_unordered(self):
+        tp = _TopPairs(5)
+        tp.push(1.0, 3, 7)
+        tp.push(1.0, 7, 3)
+        assert len(tp.heap) == 1
+
+    def test_bound(self):
+        tp = _TopPairs(2)
+        assert tp.bound == np.inf
+        tp.push(4.0, 0, 1)
+        assert tp.bound == np.inf  # not full yet
+        tp.push(2.0, 2, 3)
+        assert tp.bound == 4.0
+
+
+class TestRadiusFiltering:
+    def test_ratio_within_c(self, cp_index, exact):
+        res = cp_index.cp_query(k=10)
+        ratio = np.mean(res.distances / np.maximum(exact.distances, 1e-9))
+        assert ratio <= cp_index.params.c  # the c-ACP contract (c = 4)
+        assert ratio >= 1.0 - 1e-6
+
+    def test_recall_reasonable(self, cp_index, exact):
+        res = cp_index.cp_query(k=10, T=50_000)
+        rec = len(_pairset(res.pairs) & _pairset(exact.pairs)) / 10
+        assert rec >= 0.5
+
+    def test_work_bounded(self, cp_index):
+        res = cp_index.cp_query(k=5, T=3000)
+        all_pairs = cp_index.n * (cp_index.n - 1) // 2
+        assert res.pairs_verified < all_pairs * 0.2
+
+    def test_pairs_are_distinct_points(self, cp_index):
+        res = cp_index.cp_query(k=10)
+        assert (res.pairs[:, 0] != res.pairs[:, 1]).all()
+
+    def test_distances_match_data(self, cp_index):
+        res = cp_index.cp_query(k=5)
+        for (i, j), d in zip(res.pairs, res.distances):
+            true = np.linalg.norm(cp_index.data[i] - cp_index.data[j])
+            assert d == pytest.approx(true, rel=1e-4)
+
+
+class TestBranchAndBound:
+    def test_near_exact_with_generous_budget(self):
+        data = make_clustered(300, 16, n_clusters=10, seed=2)
+        cp = PMLSH_CP(data, c=4.0, seed=0)
+        ex = cp.exact_cp(k=5)
+        res = cp.cp_query_bb(k=5, T=2000)
+        ratio = np.mean(res.distances / np.maximum(ex.distances, 1e-9))
+        assert ratio <= 1.6
+
+    def test_mindist_zero_phenomenon(self):
+        """§6.2: most node pairs overlap (Mindist = 0) — the motivation
+        for radius filtering."""
+        from repro.core.cp import _mindist
+
+        data = make_clustered(500, 24, n_clusters=5, spread=2.0, seed=3)
+        cp = PMLSH_CP(data, c=4.0, seed=0)
+        t = cp.tree
+        inner = np.where(~t.is_leaf)[0][:30]
+        zeros = total = 0
+        for a in inner:
+            for b in inner:
+                if a < b:
+                    total += 1
+                    zeros += _mindist(t, int(a), int(b)) == 0.0
+        assert zeros / max(total, 1) > 0.3  # overlap is pervasive
+
+
+class TestGamma:
+    def test_calibration_range(self, cp_index):
+        g = calibrate_gamma(cp_index.tree, pr=0.85)
+        assert 0.1 < g < 100
+
+    def test_monotone_in_pr(self, cp_index):
+        g50 = calibrate_gamma(cp_index.tree, pr=0.50)
+        g95 = calibrate_gamma(cp_index.tree, pr=0.95)
+        assert g95 >= g50
+
+
+class TestExactNLJ:
+    def test_matches_naive(self):
+        rng = np.random.default_rng(4)
+        data = rng.normal(size=(120, 8)).astype(np.float32)
+        cp = PMLSH_CP(data, c=4.0, seed=0)
+        res = cp.exact_cp(k=3)
+        # naive O(n²)
+        d = np.linalg.norm(data[:, None] - data[None], axis=-1)
+        iu = np.triu_indices(120, 1)
+        order = np.argsort(d[iu])[:3]
+        want = sorted(d[iu][order].tolist())
+        np.testing.assert_allclose(sorted(res.distances.tolist()), want, rtol=1e-5)

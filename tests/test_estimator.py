@@ -1,0 +1,159 @@
+"""Unit + property tests: χ² estimator and tunable confidence interval
+(paper Lemmas 1-3, Eq. 10, §5.2 r_min selection)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.estimator import (
+    chi2_cdf,
+    chi2_ppf,
+    chi2_upper_quantile,
+    confidence_interval,
+    empirical_distance_distribution,
+    estimate_distance_sq,
+    select_rmin,
+    solve_parameters,
+)
+from repro.core.hashing import ProjectionFamily
+
+
+class TestChi2:
+    def test_ppf_cdf_roundtrip(self):
+        for m in (1, 5, 15, 100):
+            for p in (0.01, 0.1405, 0.5, 1 - 1 / math.e, 0.99):
+                assert chi2_cdf(chi2_ppf(p, m), m) == pytest.approx(p, abs=1e-6)
+
+    def test_upper_quantile_convention(self):
+        # ∫_{χ²_α}^∞ f = α  ⇔  CDF(χ²_α) = 1 - α
+        x = chi2_upper_quantile(0.368, 15)
+        assert chi2_cdf(x, 15) == pytest.approx(1 - 0.368, abs=1e-6)
+
+    def test_known_value(self):
+        # χ²(15) median ≈ 14.339
+        assert chi2_ppf(0.5, 15) == pytest.approx(14.339, abs=0.01)
+
+
+class TestLemma12:
+    """r'²/r² ~ χ²(m) and unbiasedness of r̂² = r'²/m."""
+
+    def test_unbiased(self):
+        # NOTE: with a FIXED projection matrix A the dataset-average ratio
+        # concentrates at trace(AAᵀ)/(d·m), which itself fluctuates ~5%
+        # around 1; unbiasedness is over the draw of A, so average over
+        # several families.
+        rng = np.random.default_rng(0)
+        o1 = rng.normal(size=(2000, 48)).astype(np.float32)
+        o2 = rng.normal(size=(2000, 48)).astype(np.float32)
+        r2 = np.sum((o1 - o2) ** 2, axis=-1)
+        means = []
+        for seed in range(8):
+            fam = ProjectionFamily.create(d=48, m=15, seed=seed)
+            rp2 = np.sum(
+                (np.asarray(fam.project(o1)) - np.asarray(fam.project(o2))) ** 2,
+                axis=-1,
+            )
+            means.append(np.mean(estimate_distance_sq(rp2, fam.m) / r2))
+        assert np.mean(means) == pytest.approx(1.0, abs=0.04)
+
+    def test_chi2_distribution(self):
+        """K-S style check on r'²/r² against χ²(m) quantiles.
+
+        Pooled over several projection families: conditioned on one A the
+        statistic is a generalized-χ² (eigenvalues of AAᵀ), and only over
+        the draw of A does it become exactly χ²(m)."""
+        m = 15
+        rng = np.random.default_rng(1)
+        stats = []
+        for seed in range(40):
+            fam = ProjectionFamily.create(d=64, m=m, seed=seed)
+            o1 = rng.normal(size=(200, 64)).astype(np.float32)
+            o2 = rng.normal(size=(200, 64)).astype(np.float32)
+            r2 = np.sum((o1 - o2) ** 2, axis=-1)
+            rp2 = np.sum(
+                (np.asarray(fam.project(o1)) - np.asarray(fam.project(o2))) ** 2,
+                axis=-1,
+            )
+            stats.append(rp2 / r2)
+        stat = np.concatenate(stats)
+        for p in (0.1, 0.25, 0.5, 0.75, 0.9):
+            frac = float(np.mean(stat <= chi2_ppf(p, m)))
+            assert frac == pytest.approx(p, abs=0.03), f"quantile {p}"
+
+
+class TestLemma3:
+    def test_ci_coverage(self):
+        """The 1-2α confidence interval covers r' at the stated rate."""
+        m, alpha = 15, 0.1
+        fam = ProjectionFamily.create(d=32, m=m, seed=2)
+        rng = np.random.default_rng(2)
+        o1 = rng.normal(size=(5000, 32)).astype(np.float32)
+        o2 = rng.normal(size=(5000, 32)).astype(np.float32)
+        r = np.linalg.norm(o1 - o2, axis=-1)
+        rp = np.linalg.norm(
+            np.asarray(fam.project(o1)) - np.asarray(fam.project(o2)), axis=-1
+        )
+        # per-pair CI: [r√χ²_{1-α}, r√χ²_α]
+        lo = r * math.sqrt(chi2_upper_quantile(1 - alpha, m))
+        hi = r * math.sqrt(chi2_upper_quantile(alpha, m))
+        cover = float(np.mean((rp >= lo) & (rp <= hi)))
+        assert cover == pytest.approx(1 - 2 * alpha, abs=0.03)
+
+    def test_interval_orientation(self):
+        lo, hi = confidence_interval(2.0, 15, 0.05)
+        assert 0 < lo < hi
+
+
+class TestEq10:
+    def test_paper_setting_c15(self):
+        p = solve_parameters(1.5, m=15)
+        # t² must equal the α₁=1/e upper quantile
+        assert p.t**2 == pytest.approx(chi2_upper_quantile(1 / math.e, 15), rel=1e-6)
+        # Lemma 5 default: β = 2α₂ ⇒ joint success ≥ 1/2 - 1/e
+        assert p.success_probability == pytest.approx(0.5 - 1 / math.e, abs=1e-6)
+        assert 0 < p.alpha2 < 1 and 0 < p.beta < 1
+
+    @given(
+        c=st.floats(min_value=1.05, max_value=4.0),
+        m=st.integers(min_value=2, max_value=64),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_solutions_valid(self, c, m):
+        p = solve_parameters(c, m=m)
+        assert p.t > 0
+        assert 0 <= p.alpha2 < 1
+        # E2's Markov bound needs β > α₂
+        assert p.beta > p.alpha2 or p.alpha2 == 0
+
+    def test_alpha2_decreases_with_c(self):
+        a = [solve_parameters(c, m=15).alpha2 for c in (1.1, 1.5, 2.0, 3.0)]
+        assert all(x > y for x, y in zip(a, a[1:]))
+
+    def test_invalid_args(self):
+        with pytest.raises(ValueError):
+            solve_parameters(1.0, m=15)
+        with pytest.raises(ValueError):
+            solve_parameters(2.0, m=0)
+        with pytest.raises(ValueError):
+            solve_parameters(2.0, m=15, alpha1=1.5)
+
+
+class TestRmin:
+    def test_rmin_targets_budget(self):
+        rng = np.random.default_rng(3)
+        data = rng.normal(size=(3000, 16)).astype(np.float32)
+        beta, k = 0.1, 10
+        r = select_rmin(data, beta, k, n_samples=30000)
+        d, cdf = empirical_distance_distribution(data, n_samples=30000, seed=7)
+        # fraction of pairs within r should be near (βn+k)/n, slightly under
+        frac = float(np.searchsorted(d, r) / d.size)
+        target = (beta * 3000 + k) / 3000
+        assert frac <= target * 1.05
+        # shrink factor + steep F(x) can undershoot substantially; the
+        # algorithm only needs r_min to be *at most* the budget radius
+        assert frac >= target * 0.2
+
+    def test_rmin_positive(self):
+        data = np.random.default_rng(0).normal(size=(100, 8)).astype(np.float32)
+        assert select_rmin(data, 0.05, 1) > 0

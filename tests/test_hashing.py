@@ -1,0 +1,73 @@
+"""Unit tests: 2-stable hash families (paper §2.2)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hashing import (
+    BucketFamily,
+    ProjectionFamily,
+    collision_probability,
+    pstable_check,
+)
+
+
+class TestProjectionFamily:
+    def test_shapes(self):
+        fam = ProjectionFamily.create(d=32, m=15, seed=0)
+        assert fam.d == 32 and fam.m == 15
+        x = np.ones((7, 32), np.float32)
+        assert fam.project(x).shape == (7, 15)
+
+    def test_deterministic(self):
+        a = ProjectionFamily.create(8, 4, seed=3).a
+        b = ProjectionFamily.create(8, 4, seed=3).a
+        assert jnp.array_equal(a, b)
+
+    def test_2stable_property(self):
+        """ρ/r ~ N(0,1): the fact Lemma 1 rests on."""
+        fam = ProjectionFamily.create(d=64, m=15, seed=0)
+        samples = pstable_check(fam, n_samples=4096)
+        assert abs(samples.mean()) < 0.05
+        assert abs(samples.std() - 1.0) < 0.05
+        # 4th moment of N(0,1) is 3 — catches non-Gaussian projections
+        assert abs((samples**4).mean() - 3.0) < 0.4
+
+    def test_linear(self):
+        fam = ProjectionFamily.create(16, 5, seed=1)
+        x = np.random.default_rng(0).normal(size=(3, 16)).astype(np.float32)
+        y = np.random.default_rng(1).normal(size=(3, 16)).astype(np.float32)
+        lhs = fam.project(x + y)
+        rhs = fam.project(x) + fam.project(y)
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+
+class TestBucketFamily:
+    def test_bucket_int(self):
+        fam = BucketFamily.create(d=16, m=4, w=4.0, seed=0)
+        x = np.random.default_rng(0).normal(size=(11, 16)).astype(np.float32)
+        h = fam.hash(x)
+        assert h.shape == (11, 4) and h.dtype == jnp.int32
+
+    def test_offset_in_range(self):
+        fam = BucketFamily.create(4, 8, w=2.5, seed=2)
+        b = np.asarray(fam.b)
+        assert (b >= 0).all() and (b < 2.5).all()
+
+    def test_nearby_points_share_buckets(self):
+        fam = BucketFamily.create(d=32, m=4, w=8.0, seed=0)
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(256, 32)).astype(np.float32)
+        near = x + rng.normal(size=x.shape).astype(np.float32) * 0.01
+        far = rng.normal(size=x.shape).astype(np.float32) * 5
+        share_near = (np.asarray(fam.hash(x)) == np.asarray(fam.hash(near))).all(1).mean()
+        share_far = (np.asarray(fam.hash(x)) == np.asarray(fam.hash(far))).all(1).mean()
+        assert share_near > share_far + 0.3
+
+
+def test_collision_probability_monotone():
+    """Eq. 2: p(τ) decreases in τ."""
+    taus = jnp.linspace(0.1, 20.0, 32)
+    p = collision_probability(taus, w=4.0)
+    assert (jnp.diff(p) <= 1e-6).all()
+    assert float(p[0]) > 0.9  # very close points almost surely collide
+    assert float(p[-1]) < 0.2

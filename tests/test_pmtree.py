@@ -1,0 +1,136 @@
+"""Unit + property tests: PM-tree construction and range queries."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pmtree import build_bulk, build_insert, select_pivots
+from repro.core.pmtree_query import (
+    DeviceTree,
+    QueryStats,
+    range_mask_device,
+    range_query_device,
+    range_query_host,
+)
+
+
+def _brute(points: np.ndarray, q: np.ndarray, r: float) -> set:
+    return set(np.where(np.linalg.norm(points - q, axis=-1) <= r)[0].tolist())
+
+
+class TestBuilders:
+    @pytest.mark.parametrize("builder,kw", [
+        (build_bulk, {"fanout": 2}),
+        (build_bulk, {"fanout": 4}),
+        (build_bulk, {"fanout": 16}),
+        (build_insert, {"promote": "m_RAD"}),
+        (build_insert, {"promote": "random"}),
+    ])
+    def test_invariants(self, builder, kw):
+        rng = np.random.default_rng(0)
+        pts = rng.normal(size=(300, 15)).astype(np.float32)
+        tree = builder(pts, capacity=16, n_pivots=5, seed=0, **kw)
+        tree.validate()
+        assert tree.n_points == 300
+        assert tree.n_pivots == 5
+
+    def test_duplicates_ok(self):
+        pts = np.zeros((100, 8), np.float32)  # all identical
+        tree = build_bulk(pts, capacity=8)
+        tree.validate()
+
+    def test_tiny(self):
+        pts = np.random.default_rng(1).normal(size=(3, 4)).astype(np.float32)
+        tree = build_bulk(pts, capacity=16)
+        tree.validate()
+        assert tree.n_nodes == 1  # single leaf-root
+
+    @given(
+        n=st.integers(min_value=2, max_value=400),
+        m=st.integers(min_value=2, max_value=20),
+        cap=st.integers(min_value=2, max_value=32),
+        fanout=st.integers(min_value=2, max_value=8),
+        seed=st.integers(min_value=0, max_value=5),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_bulk_property(self, n, m, cap, fanout, seed):
+        rng = np.random.default_rng(seed)
+        pts = rng.normal(size=(n, m)).astype(np.float32)
+        tree = build_bulk(pts, capacity=cap, fanout=fanout, n_pivots=3, seed=seed)
+        tree.validate()
+
+    def test_pivots_spread(self):
+        pts = np.random.default_rng(2).normal(size=(500, 10)).astype(np.float32)
+        piv = select_pivots(pts, 5, seed=0)
+        assert piv.shape == (5, 10)
+        # pairwise distinct
+        d = np.linalg.norm(piv[:, None] - piv[None], axis=-1)
+        assert (d[np.triu_indices(5, 1)] > 0).all()
+
+
+class TestRangeQueryHost:
+    @given(
+        r=st.floats(min_value=0.5, max_value=8.0),
+        seed=st.integers(min_value=0, max_value=10),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_matches_brute_force(self, r, seed):
+        rng = np.random.default_rng(seed)
+        pts = rng.normal(size=(250, 12)).astype(np.float32)
+        tree = build_bulk(pts, capacity=8, fanout=4, seed=seed)
+        q = rng.normal(size=(12,)).astype(np.float32)
+        slots, stats = range_query_host(tree, q, r)
+        assert set(slots.tolist()) == _brute(tree.points, q, r)
+        assert stats.nodes_accessed >= 1
+
+    def test_pruning_saves_work(self):
+        """A tight query must scan far fewer points than n."""
+        rng = np.random.default_rng(3)
+        centers = rng.normal(size=(10, 15)) * 10
+        pts = (centers[rng.integers(0, 10, 2000)]
+               + rng.normal(size=(2000, 15)) * 0.3).astype(np.float32)
+        tree = build_bulk(pts, capacity=16, fanout=4, seed=0)
+        q = pts[0]
+        _, stats = range_query_host(tree, q, 1.0)
+        assert stats.point_distance_computations < 2000 * 0.5
+
+
+class TestRangeQueryDevice:
+    def test_matches_host(self):
+        rng = np.random.default_rng(4)
+        pts = rng.normal(size=(300, 15)).astype(np.float32)
+        tree = build_bulk(pts, capacity=8, fanout=4, seed=1)
+        dt = DeviceTree.from_host(tree)
+        for r in (1.0, 3.0, 6.0):
+            q = rng.normal(size=(15,)).astype(np.float32)
+            host, _ = range_query_host(tree, q, r)
+            mask = np.asarray(range_mask_device(dt, jnp.asarray(q), r))
+            assert set(np.where(mask)[0].tolist()) == set(host.tolist())
+
+    def test_fixed_size_results(self):
+        rng = np.random.default_rng(5)
+        pts = rng.normal(size=(200, 10)).astype(np.float32)
+        tree = build_bulk(pts, capacity=8, seed=2)
+        dt = DeviceTree.from_host(tree)
+        q = jnp.asarray(pts[0])
+        idx, d, valid = range_query_device(dt, q, 2.0, max_results=32)
+        assert idx.shape == (32,) and d.shape == (32,)
+        host, _ = range_query_host(tree, pts[0], 2.0)
+        nvalid = int(valid.sum())
+        assert nvalid == min(32, host.size)
+        # returned distances ascend
+        dv = np.asarray(d)[:nvalid]
+        assert (np.diff(dv) >= -1e-6).all()
+
+    def test_jit_with_traced_radius(self):
+        import jax
+
+        rng = np.random.default_rng(6)
+        pts = rng.normal(size=(150, 8)).astype(np.float32)
+        tree = build_bulk(pts, capacity=8, seed=3)
+        dt = DeviceTree.from_host(tree)
+        f = jax.jit(lambda q, r: range_mask_device(dt, q, r))
+        q = jnp.asarray(pts[3])
+        m1 = np.asarray(f(q, jnp.float32(1.5)))
+        m2 = np.asarray(range_mask_device(dt, q, 1.5))
+        assert (m1 == m2).all()
