@@ -1,8 +1,9 @@
 """Table 6 reproduction: (c,k)-ACP query performance overview.
 
-PM-LSH radius filtering vs LSB-tree, ACP-P, MkCP, NLJ (exact) on the
-synthetic twins: query time, overall ratio (Eq. 14), recall, pairs
-verified.
+Every CP-capable backend in the ``repro.index`` registry — PM-LSH
+radius filtering, the sharded ring, LSB-tree, ACP-P, MkCP, and NLJ
+(exact) — swept through the one facade API on the synthetic twins:
+query time, overall ratio (Eq. 14), recall, pairs verified.
 """
 from __future__ import annotations
 
@@ -17,8 +18,7 @@ def _pairset(pairs):
 
 
 def run(quick: bool = True):
-    from repro.core import PMLSH_CP
-    from repro.core.baselines import ACPP, LSBTree, MkCP, NLJ
+    from repro.index import IndexConfig, available_backends, build_index
 
     names = ["audio", "trevi"] if quick else ["audio", "mnist", "nus", "trevi"]
     k = 10 if quick else 100
@@ -26,29 +26,25 @@ def run(quick: bool = True):
     for dname in names:
         data = make_dataset(dname, n=800 if quick else 3000)
 
-        nlj = NLJ(data)
-        (ex_pairs, ex_d, _), t_nlj = timer(nlj.cp_query, k)
-        exact_set = _pairset(ex_pairs)
+        # the exact NLJ pass doubles as ground truth AND the nlj table
+        # row — the O(n²d) join runs once per dataset
+        exact, t_nlj = timer(build_index(data, backend="nlj").cp_search, k)
+        exact_set = _pairset(exact.pairs)
 
-        algos = {}
-        pml = PMLSH_CP(data, c=4.0, m=15, seed=0)
-        algos["PM-LSH"] = lambda: (
-            lambda r: (r.pairs, r.distances, r.pairs_verified)
-        )(pml.cp_query(k=k))
-        algos["LSB-tree"] = lambda i=LSBTree(data, seed=0): i.cp_query(k)
-        algos["ACP-P"] = lambda i=ACPP(data, seed=0): i.cp_query(k)
-        if data.shape[0] <= 1500:  # MkCP degenerates (paper shows '/')
-            algos["MkCP"] = lambda i=MkCP(data, seed=0): i.cp_query(k)
-
-        out.append(csv_row(f"table6_{dname}_NLJ", t_nlj * 1e6,
-                           "recall=1.000;ratio=1.0000;verified=%d"
-                           % (data.shape[0] * (data.shape[0] - 1) // 2)))
-        for nm, fn in algos.items():
-            (pairs, dd, work), dt = timer(fn)
-            rec = len(_pairset(pairs) & exact_set) / k
-            ratio = overall_ratio(dd, ex_d)
+        for backend in available_backends("cp"):
+            if backend == "mkcp" and data.shape[0] > 1500:
+                continue  # MkCP degenerates at scale (paper shows '/')
+            if backend == "nlj":
+                res, dt = exact, t_nlj
+            else:
+                index = build_index(data, IndexConfig(backend=backend,
+                                                      cp_c=4.0, seed=0))
+                res, dt = timer(index.cp_search, k)
+            rec = len(_pairset(res.pairs) & exact_set) / k
+            ratio = overall_ratio(res.distances, exact.distances)
             out.append(csv_row(
-                f"table6_{dname}_{nm}", dt * 1e6,
-                "recall=%.3f;ratio=%.4f;verified=%d" % (rec, ratio, work),
+                f"table6_{dname}_{backend}", dt * 1e6,
+                "recall=%.3f;ratio=%.4f;verified=%d"
+                % (rec, ratio, res.stats.candidates_verified),
             ))
     return out

@@ -1,8 +1,10 @@
 """Table 4 reproduction: (c,k)-ANN query performance overview.
 
-PM-LSH (tree + flat backends) vs SRS, QALSH, Multi-Probe, R-LSH, LScan
-on the synthetic dataset twins: query time (this CPU), overall ratio
-(Eq. 12), recall (Eq. 13), and candidates verified.
+Every ANN-capable backend in the ``repro.index`` registry — PM-LSH
+(tree / flat / sharded) and the §7 competitors — swept through the one
+facade API on the synthetic dataset twins: query time (this CPU),
+overall ratio (Eq. 12), recall (Eq. 13), and candidates verified from
+the unified WorkStats.
 """
 from __future__ import annotations
 
@@ -13,9 +15,7 @@ from .datasets import make_dataset, make_queries
 
 
 def run(quick: bool = True):
-    from repro.core import PMLSH
-    from repro.core.baselines import LScan, MultiProbe, QALSH, RLSH, SRS
-    from repro.core.flat_index import ann_search, build_flat_index
+    from repro.index import IndexConfig, available_backends, build_index
 
     names = ["audio", "mnist", "trevi"] if quick else [
         "audio", "deep", "nus", "mnist", "gist", "cifar", "trevi"
@@ -28,32 +28,20 @@ def run(quick: bool = True):
         queries = make_queries(data, 5 if quick else 20)
         exact = [exact_knn(data, q, k) for q in queries]
 
-        algos = {}
-        pml = PMLSH(data, c=c, m=15, seed=0)
-        algos["PM-LSH"] = lambda q, idx=pml: (
-            lambda r: (r.indices, r.distances, r.candidates_verified)
-        )(idx.ann_query(q, k=k))
-        flat = build_flat_index(data, m=15, seed=0)
-        def flat_q(q, idx=flat):
-            ids, dd = ann_search(idx, q[None], k=k, c=c, use_kernels=False)
-            return np.asarray(ids)[0], np.asarray(dd)[0], 0
-        algos["PM-LSH/flat"] = flat_q
-        for cls, nm in ((SRS, "SRS"), (QALSH, "QALSH"),
-                        (MultiProbe, "Multi-Probe"), (RLSH, "R-LSH"),
-                        (LScan, "LScan")):
-            inst = cls(data, c=c, seed=0)
-            algos[nm] = lambda q, i=inst: i.query(q, k)
-
-        for nm, fn in algos.items():
+        for backend in available_backends("ann"):
+            index = build_index(data, IndexConfig(backend=backend, c=c,
+                                                  seed=0))
             recs, ratios, times, works = [], [], [], []
             for q, (ex_i, ex_d) in zip(queries, exact):
-                (ids, dd, work), dt = timer(fn, q)
-                recs.append(recall_of(ids, ex_i))
-                ratios.append(overall_ratio(dd, ex_d))
+                res, dt = timer(index.search, q, k)
+                ids, dd = res.indices[0], res.distances[0]
+                valid = ids >= 0
+                recs.append(recall_of(ids[valid], ex_i))
+                ratios.append(overall_ratio(dd[valid], ex_d))
                 times.append(dt)
-                works.append(work)
+                works.append(res.stats.candidates_verified)
             out.append(csv_row(
-                f"table4_{dname}_{nm}", float(np.mean(times)) * 1e6,
+                f"table4_{dname}_{backend}", float(np.mean(times)) * 1e6,
                 "recall=%.3f;ratio=%.4f;verified=%.0f"
                 % (np.mean(recs), np.mean(ratios), np.mean(works)),
             ))

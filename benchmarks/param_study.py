@@ -1,5 +1,6 @@
 """Fig. 8 reproduction: PM-LSH parameter study — #pivots s and #hash
-functions m (time / overall ratio / recall on the Trevi twin)."""
+functions m (time / overall ratio / recall on the Trevi twin), swept
+as IndexConfig variations over the pmtree facade backend."""
 from __future__ import annotations
 
 import numpy as np
@@ -9,33 +10,34 @@ from .datasets import make_dataset, make_queries
 
 
 def run(quick: bool = True):
-    from repro.core import PMLSH
+    from repro.index import IndexConfig, build_index
 
     data = make_dataset("trevi", n=2000 if quick else 8000)
     queries = make_queries(data, 4 if quick else 10)
     k = 50
+    base = IndexConfig(backend="pmtree", c=1.5, m=15, seed=0)
     out = []
 
     for s in ([3, 5, 8] if quick else [1, 3, 5, 7, 9]):
-        idx = PMLSH(data, c=1.5, m=15, s=s, seed=0)
+        idx = build_index(data, base.with_options(s=s))
         times, recs = [], []
         for q in queries:
             ex_i, _ = exact_knn(data, q, k)
-            res, dt = timer(idx.ann_query, q, k)
+            res, dt = timer(idx.search, q, k)
             times.append(dt)
-            recs.append(recall_of(res.indices, ex_i))
+            recs.append(recall_of(res.indices[0], ex_i))
         out.append(csv_row(f"fig8_s{s}", float(np.mean(times)) * 1e6,
                            "recall=%.3f" % np.mean(recs)))
 
     for m in ([10, 15, 20] if quick else [5, 10, 15, 20, 25]):
-        idx = PMLSH(data, c=1.5, m=m, seed=0)
+        idx = build_index(data, base.replace(m=m))
         times, recs, ratios = [], [], []
         for q in queries:
             ex_i, ex_d = exact_knn(data, q, k)
-            res, dt = timer(idx.ann_query, q, k)
+            res, dt = timer(idx.search, q, k)
             times.append(dt)
-            recs.append(recall_of(res.indices, ex_i))
-            ratios.append(overall_ratio(res.distances, ex_d))
+            recs.append(recall_of(res.indices[0], ex_i))
+            ratios.append(overall_ratio(res.distances[0], ex_d))
         out.append(csv_row(
             f"fig8_m{m}", float(np.mean(times)) * 1e6,
             "recall=%.3f;ratio=%.4f" % (np.mean(recs), np.mean(ratios)),

@@ -4,6 +4,11 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (framework contract), one
 per measurement, grouped per paper artifact.
+
+Algorithm sweeps (table4_nn, table6_cp, fig8_param_study) go through
+the canonical entry point ``repro.index.build_index(data,
+IndexConfig(backend=...))`` and iterate the backend registry, so a
+newly registered backend shows up in the tables automatically.
 """
 from __future__ import annotations
 
@@ -26,7 +31,12 @@ MODULES = [
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="PM-LSH paper-artifact benchmarks.  Algorithm tables "
+        "sweep every backend registered in repro.index — add an index "
+        "via build_index(data, IndexConfig(backend=...)) and it appears "
+        "in the tables.",
+    )
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow on CPU)")
     ap.add_argument("--only", default="",

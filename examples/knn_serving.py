@@ -1,6 +1,8 @@
 """kNN-LM-style retrieval serving: a PM-LSH index over model hidden
 states augments next-token prediction (Khandelwal et al.'s pattern with
-the paper's index as the datastore).
+the paper's index as the datastore).  The datastore goes through the
+``repro.index`` facade via ``serve.make_retrieval_step``, so the
+backend (flat / sharded / pmtree / ...) is a config field.
 
     PYTHONPATH=src python examples/knn_serving.py
 """
@@ -9,8 +11,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.core.flat_index import ann_search, build_flat_index
+from repro.index import IndexConfig
 from repro.models import model_module
+from repro.serve.serve_step import make_retrieval_step
 
 
 def main():
@@ -26,7 +29,10 @@ def main():
     next_tokens = np.asarray(corpus[:, 1:]).reshape(-1)
     print(f"datastore: {keys.shape[0]} (hidden → next-token) pairs")
 
-    index = build_flat_index(keys, m=15, seed=0)
+    retrieve, index = make_retrieval_step(
+        keys, next_tokens, k=8,
+        index_config=IndexConfig(backend="flat", c=1.5, m=15, seed=0),
+    )
 
     # ---- serve: blend parametric logits with kNN retrieval -------------
     prompt = corpus[:1, :32]
@@ -34,9 +40,8 @@ def main():
     q = np.asarray(hidden_q[:, -1], np.float32)  # (1, d)
     logits, _ = mod.forward(params, prompt, cfg, logits_slice="last")
 
-    ids, dists = ann_search(index, q, k=8, c=1.5)
-    ids, dists = np.asarray(ids)[0], np.asarray(dists)[0]
-    knn_tokens = next_tokens[ids]
+    payload, dists, _ = retrieve(q)
+    knn_tokens, dists = payload[0], dists[0]
     # kernel-weighted vote over retrieved next tokens
     w = np.exp(-dists / max(dists.mean(), 1e-6))
     knn_probs = np.zeros(cfg.padded_vocab())

@@ -1,12 +1,13 @@
-"""Quickstart: build a PM-LSH index, answer (c,k)-ANN and (c,k)-ACP
-queries, compare with exact answers.
+"""Quickstart: build an index through the ``repro.index`` facade,
+answer batched (c,k)-ANN and (c,k)-ACP queries, compare with exact
+answers, and swap backends with one config field.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import PMLSH, PMLSH_CP, solve_parameters
-from repro.core.flat_index import ann_search, build_flat_index
+from repro.core import solve_parameters
+from repro.index import IndexConfig, available_backends, build_index
 
 
 def main():
@@ -20,38 +21,38 @@ def main():
     params = solve_parameters(c=1.5, m=15)
     print(f"PM-LSH parameters: t={params.t:.3f} α₂={params.alpha2:.4f} "
           f"β={params.beta:.4f} (success ≥ {params.success_probability:.3f})")
+    print(f"registered backends: {', '.join(available_backends())}")
 
-    # ---- (c,k)-ANN with the PM-tree (paper-faithful host index) -------
-    index = PMLSH(data, c=1.5, m=15)
-    q = data[rng.integers(5000)] + 0.1
-    res = index.ann_query(q, k=10)
-    exact_ids, exact_d = index.exact_knn(q, 10)
-    recall = len(set(res.indices.tolist()) & set(exact_ids.tolist())) / 10
-    print(f"\nPM-tree ANN: recall={recall:.2f} "
-          f"ratio={np.mean(res.distances / exact_d):.4f} "
-          f"verified {res.candidates_verified}/{len(data)} points "
-          f"in {res.rounds} range quer{'y' if res.rounds == 1 else 'ies'}")
+    # ---- (c,k)-ANN via the facade: same call, any backend --------------
+    k = 10
+    queries = data[rng.integers(0, 5000, 4)] + 0.1  # batch of 4
+    exact = np.argsort(np.linalg.norm(data - queries[0], axis=-1))[:k]
 
-    # ---- the TPU-native flat backend (jit'd, batched) ------------------
-    flat = build_flat_index(data, m=15)
-    ids, dists = ann_search(flat, np.stack([q] * 4), k=10, c=1.5)
-    print(f"flat ANN (batch of 4): ids[0][:5]={np.asarray(ids)[0][:5]} "
-          f"d[0][0]={float(np.asarray(dists)[0][0]):.4f}")
+    for backend in ("pmtree", "flat"):
+        index = build_index(data, IndexConfig(backend=backend, c=1.5, m=15))
+        res = index.search(queries, k=k)  # (4, 10) int32 / float32
+        recall = len(set(res.indices[0].tolist()) & set(exact.tolist())) / k
+        print(f"{backend:7s} ANN (batch of 4): recall={recall:.2f} "
+              f"verified {res.stats.candidates_verified} candidates "
+              f"in {res.stats.rounds} rounds")
 
-    # ---- (c,k)-ACP closest pairs ---------------------------------------
-    cp = PMLSH_CP(data[:1000], c=4.0, m=15)
-    # T = candidate-pair budget (βn(n-1)/2 + k); the Eq. 10 default at
-    # c = 4 is very lean — spend a little more for higher recall
-    cp_res = cp.cp_query(k=5, T=20_000)
-    exact_cp = cp.exact_cp(k=5)
+    # ---- (c,k)-ACP closest pairs via the same facade -------------------
+    cp_index = build_index(
+        data[:1000],
+        # T = candidate-pair budget (βn(n-1)/2 + k); the Eq. 10 default
+        # at c = 4 is very lean — spend a little more for higher recall
+        IndexConfig(backend="pmtree", cp_c=4.0, options={"cp_T": 20_000}),
+    )
+    cp_res = cp_index.cp_search(k=5)
+    exact_cp = build_index(data[:1000], backend="nlj").cp_search(k=5)
     pair_recall = len(
         {tuple(sorted(p)) for p in cp_res.pairs.tolist()}
         & {tuple(sorted(p)) for p in exact_cp.pairs.tolist()}
     ) / 5
     print(f"\nCP radius-filtering: recall={pair_recall:.2f} "
           f"ratio={np.mean(cp_res.distances / exact_cp.distances):.4f} "
-          f"verified {cp_res.pairs_verified} of "
-          f"{1000 * 999 // 2} pairs ({cp_res.nodes_examined} nodes)")
+          f"verified {cp_res.stats.candidates_verified} of "
+          f"{1000 * 999 // 2} pairs")
 
 
 if __name__ == "__main__":

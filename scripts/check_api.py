@@ -1,0 +1,83 @@
+"""CI gate for the repro.index facade.
+
+Imports every registered backend, builds it over a seeded 256×32
+dataset, runs one batched ANN search (and one cp_search where the
+backend is CP-capable), and asserts the uniform contract: (B, k) int32
+indices / float32 distances, true original-space distances, WorkStats
+attached.  Exits non-zero on the first violation.
+
+    PYTHONPATH=src python scripts/check_api.py
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+
+def main() -> int:
+    from repro.index import (
+        CpSearchResult,
+        IndexConfig,
+        SearchResult,
+        available_backends,
+        backend_capabilities,
+        build_index,
+    )
+
+    rng = np.random.default_rng(0)
+    centers = rng.normal(size=(8, 32)).astype(np.float32) * 4
+    data = (centers[rng.integers(0, 8, 256)]
+            + rng.normal(size=(256, 32)).astype(np.float32) * 0.5)
+    queries = data[:4] + 0.05
+    B, k = 4, 5
+
+    failures = []
+    for backend in available_backends():
+        caps = backend_capabilities(backend)
+        t0 = time.perf_counter()
+        try:
+            index = build_index(data, IndexConfig(backend=backend, seed=0))
+            checked = []
+            if "ann" in caps:
+                res = index.search(queries, k)
+                assert isinstance(res, SearchResult)
+                assert res.indices.shape == (B, k), res.indices.shape
+                assert res.distances.shape == (B, k), res.distances.shape
+                assert res.indices.dtype == np.int32
+                assert res.distances.dtype == np.float32
+                valid = res.indices >= 0
+                assert valid.any(), "no results returned"
+                for b in range(B):
+                    for i, d in zip(res.indices[b], res.distances[b]):
+                        if i < 0:
+                            continue
+                        true = np.linalg.norm(data[i] - queries[b])
+                        assert abs(d - true) <= 1e-3 * max(true, 1.0), (
+                            f"distance {d} != true {true}"
+                        )
+                checked.append(f"ann verified={res.stats.candidates_verified}")
+            if "cp" in caps:
+                res = index.cp_search(3)
+                assert isinstance(res, CpSearchResult)
+                assert res.pairs.shape == (3, 2), res.pairs.shape
+                assert res.pairs.dtype == np.int32
+                assert res.distances.dtype == np.float32
+                assert (res.pairs[:, 0] != res.pairs[:, 1]).all()
+                checked.append("cp")
+            dt = time.perf_counter() - t0
+            print(f"  ok   {backend:12s} [{', '.join(checked)}] {dt:.2f}s")
+        except Exception as e:  # noqa: BLE001 - report and keep sweeping
+            failures.append(backend)
+            print(f"  FAIL {backend:12s} {type(e).__name__}: {e}")
+
+    if failures:
+        print(f"check_api: FAILED for {failures}")
+        return 1
+    print(f"check_api: all {len(available_backends())} backends conform")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,8 @@
 """repro — PM-LSH (Zheng et al., VLDBJ 2021) as a production JAX framework.
 
 Layers:
+  repro.index    — unified Index facade: build_index / IndexConfig /
+                   SearchResult over a pluggable backend registry
   repro.core     — the paper: LSH projections, χ² estimator, PM-tree,
                    (c,k)-ANN and (c,k)-ACP query processing
   repro.kernels  — Pallas TPU kernels for the verification hot spots

@@ -1,0 +1,54 @@
+"""Version-compatibility shims over the jax API surface.
+
+The repo targets current jax, where ``jax.shard_map`` / ``check_vma`` /
+``jax.sharding.AxisType`` are public; older installs (≤ 0.4.x) spell
+these ``jax.experimental.shard_map.shard_map`` / ``check_rep`` and have
+no axis types.  Every sharded code path goes through these helpers so
+the rest of the tree can be written against one spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None):
+    """``jax.shard_map`` with replication checking off, on any jax.
+
+    Outputs of every caller in this repo are value-replicated after an
+    all-gather/psum, which the static replication checker cannot prove —
+    hence ``check_vma=False`` (new) / ``check_rep=False`` (old).
+    ``axis_names`` restricts manual axes (new spelling); on old jax it
+    maps to the complementary ``auto`` set.
+    """
+    impl = getattr(jax, "shard_map", None)
+    if impl is None:
+        from jax.experimental.shard_map import shard_map as impl
+
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+        if axis_names is not None:
+            kwargs["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+        return impl(f, **kwargs)
+    for check in ({"check_vma": False}, {"check_rep": False}):
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **check)
+        if axis_names is not None:
+            kwargs["axis_names"] = frozenset(axis_names)
+        try:
+            return impl(f, **kwargs)
+        except TypeError:
+            continue
+    return impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
+def make_mesh(shape, axis_names):
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                shape, axis_names, axis_types=(axis_type.Auto,) * len(shape)
+            )
+        except TypeError:
+            pass
+    return jax.make_mesh(shape, axis_names)

@@ -22,4 +22,13 @@ from .estimator import (  # noqa: F401
 from .pmtree import FlatPMTree, build_bulk, build_insert, select_pivots  # noqa: F401
 from .ann import PMLSH, AnnResult  # noqa: F401
 from .cp import PMLSH_CP, CpResult, calibrate_gamma  # noqa: F401
-from .flat_index import FlatIndex, build_flat_index, ann_search  # noqa: F401
+from .flat_index import (  # noqa: F401
+    FlatIndex,
+    ann_search,
+    build_flat_index,
+    candidate_budget,
+)
+
+# The backend-pluggable entry point over this module's index families
+# lives in ``repro.index`` (build_index / IndexConfig / SearchResult);
+# the imports above remain the stable low-level surface.

@@ -27,8 +27,8 @@ __all__ = ["PMLSH", "AnnResult"]
 
 @dataclasses.dataclass
 class AnnResult:
-    indices: np.ndarray  # (k,) original dataset ids
-    distances: np.ndarray  # (k,) original-space distances
+    indices: np.ndarray  # (k,) int32 original dataset ids
+    distances: np.ndarray  # (k,) float32 original-space distances
     rounds: int  # number of range queries issued
     candidates_verified: int  # |C| — original-space distance computations
     stats: QueryStats  # accumulated tree-traversal work
@@ -154,7 +154,7 @@ class PMLSH:
         order = np.argsort(dist_arr)[:k]
         ids = self.tree.perm[slots_arr[order]]
         return AnnResult(
-            indices=ids.astype(np.int64),
+            indices=ids.astype(np.int32),
             distances=dist_arr[order].astype(np.float32),
             rounds=rounds,
             candidates_verified=len(verified),

@@ -33,8 +33,8 @@ __all__ = ["PMLSH_CP", "CpResult", "calibrate_gamma"]
 
 @dataclasses.dataclass
 class CpResult:
-    pairs: np.ndarray  # (k, 2) original ids
-    distances: np.ndarray  # (k,) original distances
+    pairs: np.ndarray  # (k, 2) int32 original ids
+    distances: np.ndarray  # (k,) float32 original distances
     pairs_verified: int  # original-space pair distance computations
     nodes_examined: int
 
@@ -175,7 +175,7 @@ class PMLSH_CP:
     def _emit(self, top: _TopPairs, verified: int, nodes: int, k: int) -> CpResult:
         out = top.sorted()[:k]
         pairs = np.asarray(
-            [[self.tree.perm[i], self.tree.perm[j]] for _, i, j in out], dtype=np.int64
+            [[self.tree.perm[i], self.tree.perm[j]] for _, i, j in out], dtype=np.int32
         ).reshape(-1, 2)
         dists = np.asarray([d for d, _, _ in out], dtype=np.float32)
         return CpResult(pairs=pairs, distances=dists, pairs_verified=verified,
@@ -319,7 +319,7 @@ class PMLSH_CP:
                     if np.isfinite(d[ai, bj]):
                         top.push(float(d[ai, bj]), i0 + int(ai), j0 + int(bj))
         out = top.sorted()[:k]
-        pairs = np.asarray([[i, j] for _, i, j in out], dtype=np.int64).reshape(-1, 2)
+        pairs = np.asarray([[i, j] for _, i, j in out], dtype=np.int32).reshape(-1, 2)
         dists = np.asarray([d for d, _, _ in out], dtype=np.float32)
         return CpResult(pairs=pairs, distances=dists, pairs_verified=count,
                         nodes_examined=0)

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from .hashing import ProjectionFamily
 
 
@@ -38,10 +39,10 @@ def shard_points(data: np.ndarray, mesh: Mesh, axis: str = "data"):
     return jax.device_put(jnp.asarray(data), NamedSharding(mesh, spec)), n
 
 
-@partial(jax.jit, static_argnames=("k", "local_T", "axis", "n_valid"))
-def _ann_shardmap(data_sh, proj_sh, qp, q, *, k: int, local_T: int,
-                  axis: str, n_valid: int):
-    mesh = jax.typeof(data_sh).sharding.mesh  # abstract mesh under jit
+@partial(jax.jit,
+         static_argnames=("mesh", "k", "local_T", "axis", "n_valid"))
+def _ann_shardmap(data_sh, proj_sh, qp, q, *, mesh: Mesh, k: int,
+                  local_T: int, axis: str, n_valid: int):
 
     def local(data_blk, proj_blk, qp_rep, q_rep):
         # local ESTIMATE: projected distances on this shard's slice
@@ -67,12 +68,11 @@ def _ann_shardmap(data_sh, proj_sh, qp, q, *, k: int, local_T: int,
         negk, sel = jax.lax.top_k(-d2_flat, k)
         return jnp.take_along_axis(gid_flat, sel, axis=1), jnp.sqrt(-negk)
 
-    return jax.shard_map(
+    return compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(P(axis, None), P(axis, None), P(), P()),
-        out_specs=(P(), P()),
-        check_vma=False,  # outputs are value-replicated post all-gather
+        out_specs=(P(), P()),  # outputs are value-replicated post all-gather
     )(data_sh, proj_sh, qp, q)
 
 
@@ -89,18 +89,23 @@ class DistributedFlatIndex:
                                             mesh, axis)
         self.proj_sh, _ = shard_points(proj, mesh, axis)
 
+    def local_budget(self, T: int, k: int) -> int:
+        """Per-shard candidate budget: ⌈T/P⌉ + k slack, ≤ shard size."""
+        P_ = self.mesh.shape[self.axis]
+        return min(-(-T // P_) + k, self.data_sh.shape[0] // P_)
+
     def query(self, q: np.ndarray, k: int, T: int | None = None):
         q = jnp.atleast_2d(jnp.asarray(q, jnp.float32))
         qp = self.family.project(q)
-        P_ = self.mesh.shape[self.axis]
         T = T or max(4 * k, 64)
-        local_T = min(-(-T // P_) + k, self.data_sh.shape[0] // P_)
+        local_T = self.local_budget(T, k)
         with self.mesh:
             ids, dists = _ann_shardmap(
-                self.data_sh, self.proj_sh, qp, q,
+                self.data_sh, self.proj_sh, qp, q, mesh=self.mesh,
                 k=k, local_T=local_T, axis=self.axis, n_valid=self.n,
             )
-        return np.asarray(ids), np.asarray(dists)
+        return (np.asarray(ids, dtype=np.int32),
+                np.asarray(dists, dtype=np.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -108,15 +113,16 @@ class DistributedFlatIndex:
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("k", "axis", "n_valid", "t_mult"))
-def _cp_ring(data_sh, proj_sh, *, k: int, axis: str, n_valid: int,
-             t_mult: float):
-    mesh = jax.typeof(data_sh).sharding.mesh
+@partial(jax.jit,
+         static_argnames=("mesh", "k", "axis", "n_valid", "t_mult"))
+def _cp_ring(data_sh, proj_sh, *, mesh: Mesh, k: int, axis: str,
+             n_valid: int, t_mult: float):
+
+    P_ = mesh.shape[axis]
 
     def local(data_blk, proj_blk):
         nl = data_blk.shape[0]
         shard = jax.lax.axis_index(axis)
-        P_ = jax.lax.axis_size(axis)
         gid = shard * nl + jnp.arange(nl)
 
         def pair_min(a_pts, a_gid, b_pts, b_gid, same):
@@ -132,17 +138,17 @@ def _cp_ring(data_sh, proj_sh, *, k: int, axis: str, n_valid: int,
             flat = d2.reshape(-1)
             neg, idx = jax.lax.top_k(-flat, k)
             ai, bi = idx // d2.shape[1], idx % d2.shape[1]
-            return -neg, a_gid[ai], b_gid[bi]
+            return -neg, a_gid[ai], b_gid[bi], jnp.sum(valid)
 
         # local self-join → k best + global ub via all-reduce(min)
-        d0, i0, j0 = pair_min(data_blk, gid, data_blk, gid, True)
+        d0, i0, j0, cnt0 = pair_min(data_blk, gid, data_blk, gid, True)
         ub = jax.lax.pmin(jax.lax.sort(d0)[k - 1], axis)
 
         # ring pass: rotate (projected, data, gid) around the ring;
         # radius filtering = only verify pairs whose PROJECTED distance
         # beats t·ub (the Algorithm-4 test, distance-level)
         def hop(carry, _):
-            best_d, best_i, best_j, r_pts, r_proj, r_gid = carry
+            best_d, best_i, best_j, cnt, r_pts, r_proj, r_gid = carry
             perm = [(i, (i + 1) % P_) for i in range(P_)]
             r_pts = jax.lax.ppermute(r_pts, axis, perm)
             r_proj = jax.lax.ppermute(r_proj, axis, perm)
@@ -170,23 +176,24 @@ def _cp_ring(data_sh, proj_sh, *, k: int, axis: str, n_valid: int,
             cat_j = jnp.concatenate([best_j, r_gid[bi]])
             negk, sel = jax.lax.top_k(-cat_d, k)
             return (
-                -negk, cat_i[sel], cat_j[sel], r_pts, r_proj, r_gid
+                -negk, cat_i[sel], cat_j[sel], cnt + jnp.sum(valid & gate),
+                r_pts, r_proj, r_gid
             ), None
 
-        carry = (d0, i0, j0, data_blk, proj_blk, gid)
-        (bd, bi, bj, *_), _ = jax.lax.scan(hop, carry, None, length=P_ - 1)
+        carry = (d0, i0, j0, cnt0, data_blk, proj_blk, gid)
+        (bd, bi, bj, cnt, *_), _ = jax.lax.scan(hop, carry, None,
+                                                length=P_ - 1)
         # merge across shards
         all_d = jax.lax.all_gather(bd, axis).reshape(-1)
         all_i = jax.lax.all_gather(bi, axis).reshape(-1)
         all_j = jax.lax.all_gather(bj, axis).reshape(-1)
         negk, sel = jax.lax.top_k(-all_d, k)
-        return -negk, all_i[sel], all_j[sel]
+        return -negk, all_i[sel], all_j[sel], jax.lax.psum(cnt, axis)
 
-    return jax.shard_map(
+    return compat.shard_map(
         local, mesh=mesh,
         in_specs=(P(axis, None), P(axis, None)),
-        out_specs=(P(), P(), P()),
-        check_vma=False,  # outputs are value-replicated post all-gather
+        out_specs=(P(), P(), P(), P()),  # value-replicated post all-gather
     )(data_sh, proj_sh)
 
 
@@ -206,11 +213,16 @@ class DistributedCP:
         self.proj_sh, _ = shard_points(proj, mesh, axis)
         self.t = solve_parameters(c, m=m).t
 
-    def cp_query(self, k: int):
+    def cp_query(self, k: int, with_stats: bool = False):
+        """Returns (pairs, distances)[, pairs_verified if with_stats]."""
         with self.mesh:
-            d, i, j = _cp_ring(
-                self.data_sh, self.proj_sh, k=k, axis=self.axis,
-                n_valid=self.n, t_mult=float(self.t),
+            d, i, j, cnt = _cp_ring(
+                self.data_sh, self.proj_sh, mesh=self.mesh, k=k,
+                axis=self.axis, n_valid=self.n, t_mult=float(self.t),
             )
-        d = np.sqrt(np.maximum(np.asarray(d), 0))
-        return np.stack([np.asarray(i), np.asarray(j)], axis=1), d
+        d = np.sqrt(np.maximum(np.asarray(d), 0)).astype(np.float32)
+        pairs = (np.stack([np.asarray(i), np.asarray(j)], axis=1)
+                 .astype(np.int32))
+        if with_stats:
+            return pairs, d, int(cnt)
+        return pairs, d

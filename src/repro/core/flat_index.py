@@ -28,7 +28,7 @@ import numpy as np
 from .hashing import ProjectionFamily
 from .estimator import PMLSHParams, solve_parameters
 
-__all__ = ["FlatIndex", "build_flat_index"]
+__all__ = ["FlatIndex", "build_flat_index", "ann_search", "candidate_budget"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,11 +38,14 @@ class FlatIndex:
     data:      (n, d) original points.
     projected: (n, m) = data @ family.a  (precomputed).
     family:    the projection family (holds A).
+    params:    Eq. 10 solution cached at build time so queries never
+               re-run the χ² quantile solver (static pytree metadata).
     """
 
     data: jax.Array
     projected: jax.Array
     family: ProjectionFamily
+    params: PMLSHParams | None = None
 
     @property
     def n(self) -> int:
@@ -58,17 +61,19 @@ class FlatIndex:
 
 
 jax.tree_util.register_dataclass(
-    FlatIndex, data_fields=["data", "projected", "family"], meta_fields=[]
+    FlatIndex, data_fields=["data", "projected", "family"],
+    meta_fields=["params"],
 )
 jax.tree_util.register_dataclass(ProjectionFamily, data_fields=["a"], meta_fields=[])
 
 
 def build_flat_index(
-    data: np.ndarray | jax.Array, m: int = 15, seed: int = 0
+    data: np.ndarray | jax.Array, m: int = 15, seed: int = 0, c: float = 1.5
 ) -> FlatIndex:
     data = jnp.asarray(data, jnp.float32)
     family = ProjectionFamily.create(data.shape[1], m, seed=seed)
-    return FlatIndex(data=data, projected=family.project(data), family=family)
+    return FlatIndex(data=data, projected=family.project(data), family=family,
+                     params=solve_parameters(c, m=m))
 
 
 def candidate_budget(params: PMLSHParams, n: int, k: int) -> int:
@@ -133,8 +138,12 @@ def ann_search(
     params: PMLSHParams | None = None,
     use_kernels: bool = True,
 ):
-    """Convenience wrapper: solve parameters, pick T, run the jitted query."""
+    """Convenience wrapper: pick T from the build-time parameter cache
+    (re-solving Eq. 10 only when queried at a different ratio c)."""
     if params is None:
-        params = solve_parameters(c, m=index.m)
+        if index.params is not None and index.params.c == c:
+            params = index.params
+        else:
+            params = solve_parameters(c, m=index.m)
     T = candidate_budget(params, index.n, k)
     return ann_query(index, q, k=k, T=T, use_kernels=use_kernels)

@@ -1,0 +1,35 @@
+"""repro.index — the unified, backend-pluggable Index facade.
+
+One contract, many probing mechanisms.  PM-LSH's value proposition is a
+single estimator + candidate-budget recipe (Lemmas 1-4, T = βn + k);
+this package exposes it — and every competitor from the paper's §7
+study — behind one batched API:
+
+    from repro.index import IndexConfig, build_index
+
+    index = build_index(data, IndexConfig(backend="flat"))
+    res = index.search(queries, k=10)     # (B, k) int32 / float32
+    res.stats.candidates_verified         # unified work accounting
+
+    cp = build_index(data, IndexConfig(backend="pmtree")).cp_search(k=10)
+
+Backends register by name (``available_backends()`` lists them):
+pmtree, flat, sharded, plus the §7 baselines (multiprobe, qalsh, srs,
+rlsh, lscan, lsb_tree, acp_p, mkcp, nlj).  See DESIGN.md §4.
+"""
+from .config import IndexConfig  # noqa: F401
+from .registry import (  # noqa: F401
+    available_backends,
+    backend_capabilities,
+    build_index,
+    get_backend,
+    register_backend,
+)
+from .types import (  # noqa: F401
+    CpSearchResult,
+    Index,
+    SearchResult,
+    WorkStats,
+    pack_batch,
+)
+from .backends import BaseIndex  # noqa: F401

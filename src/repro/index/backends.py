@@ -1,0 +1,285 @@
+"""Backend adapters: every probing mechanism behind one protocol.
+
+Three first-party backends realize the PM-LSH contract:
+
+  pmtree  — the paper-faithful host index (Algorithms 1-2, counted work)
+  flat    — the device-native dense estimate→select→verify pipeline
+  sharded — the flat pipeline sharded over a mesh (tournament merge)
+
+and every competitor from the §7 study registers under the same
+protocol through thin adapters, so sweeps are a registry iteration.
+Host backends loop over the batch internally; device backends are
+batched end-to-end under jit.
+"""
+from __future__ import annotations
+
+import inspect
+
+import numpy as np
+
+from repro.core.ann import PMLSH
+from repro.core.baselines import (
+    ACPP,
+    LScan,
+    LSBTree,
+    MkCP,
+    MultiProbe,
+    NLJ,
+    QALSH,
+    RLSH,
+    SRS,
+)
+from repro.core.cp import PMLSH_CP
+from repro.core.estimator import solve_parameters
+from repro.core.flat_index import ann_query, build_flat_index, candidate_budget
+
+from .config import IndexConfig
+from .registry import register_backend
+from .types import CpSearchResult, SearchResult, WorkStats, pack_batch
+
+__all__ = ["BaseIndex"]
+
+
+def _ctor_kwargs(cls, config: IndexConfig, **common) -> dict:
+    """config.options + common kwargs, filtered to what cls.__init__
+    accepts (constructors with **kwargs take everything)."""
+    kw = {**common, **config.options}
+    params = inspect.signature(cls.__init__).parameters
+    if any(p.kind == p.VAR_KEYWORD for p in params.values()):
+        return kw
+    return {k: v for k, v in kw.items() if k in params}
+
+
+class BaseIndex:
+    """Common construction / validation shared by all adapters."""
+
+    backend_name = "base"
+    capabilities: frozenset = frozenset()
+
+    def __init__(self, data: np.ndarray, config: IndexConfig | None = None):
+        self.config = config or IndexConfig()
+        self.data = np.asarray(data, dtype=np.float32)
+        if self.data.ndim != 2:
+            raise ValueError(f"data must be (n, d), got {self.data.shape}")
+        self.n, self.d = self.data.shape
+        self._build()
+
+    def _build(self) -> None:  # pragma: no cover - overridden
+        raise NotImplementedError
+
+    # -- ANN -------------------------------------------------------------
+
+    def search(self, queries, k: int | None = None) -> SearchResult:
+        if "ann" not in self.capabilities:
+            raise NotImplementedError(
+                f"backend {self.backend_name!r} does not support ANN search"
+            )
+        q = np.atleast_2d(np.asarray(queries, dtype=np.float32))
+        if q.shape[-1] != self.d:
+            raise ValueError(f"queries have d={q.shape[-1]}, index d={self.d}")
+        k = int(k if k is not None else self.config.default_k)
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        res = self._search(q, min(k, self.n))
+        if res.k < k:  # k > n: keep the (B, k) contract via padding
+            pad_i = np.full((res.batch, k), -1, dtype=np.int32)
+            pad_d = np.full((res.batch, k), np.inf, dtype=np.float32)
+            pad_i[:, : res.k] = res.indices
+            pad_d[:, : res.k] = res.distances
+            res = SearchResult(pad_i, pad_d, stats=res.stats)
+        return res
+
+    def _search(self, q: np.ndarray, k: int) -> SearchResult:
+        raise NotImplementedError
+
+    # -- CP --------------------------------------------------------------
+
+    def cp_search(self, k: int) -> CpSearchResult:
+        if "cp" not in self.capabilities:
+            raise NotImplementedError(
+                f"backend {self.backend_name!r} does not support closest-pair"
+            )
+        return self._cp_search(int(k))
+
+    def _cp_search(self, k: int) -> CpSearchResult:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:
+        return (f"{type(self).__name__}(backend={self.backend_name!r}, "
+                f"n={self.n}, d={self.d})")
+
+
+# ---------------------------------------------------------------------------
+# first-party backends
+# ---------------------------------------------------------------------------
+
+
+@register_backend("pmtree", capabilities=("ann", "cp"))
+class PMTreeBackend(BaseIndex):
+    """Paper-faithful PM-tree index (host DFS, full work counters)."""
+
+    def _build(self) -> None:
+        # both trees are built on first use: CP-only callers never pay
+        # for the ANN tree and vice versa
+        self._ann_impl: PMLSH | None = None
+        self._cp_impl: PMLSH_CP | None = None
+
+    @property
+    def impl(self) -> PMLSH:
+        if self._ann_impl is None:
+            cfg = self.config
+            kw = _ctor_kwargs(PMLSH, cfg, m=cfg.m, c=cfg.c, seed=cfg.seed)
+            self._ann_impl = PMLSH(self.data, **kw)
+        return self._ann_impl
+
+    def _search(self, q: np.ndarray, k: int) -> SearchResult:
+        rows, stats = [], WorkStats()
+        for qi in q:
+            r = self.impl.ann_query(qi, k=k)
+            rows.append((r.indices, r.distances))
+            stats += WorkStats(
+                rounds=r.rounds,
+                candidates_verified=r.candidates_verified,
+                node_distance_computations=r.stats.node_distance_computations,
+                point_distance_computations=r.stats.point_distance_computations,
+            )
+        return SearchResult(*pack_batch(rows, k), stats=stats)
+
+    def _cp_search(self, k: int) -> CpSearchResult:
+        if self._cp_impl is None:
+            cfg = self.config
+            kw = _ctor_kwargs(PMLSH_CP, cfg, m=cfg.m, c=cfg.cp_c,
+                              seed=cfg.seed)
+            self._cp_impl = PMLSH_CP(self.data, **kw)
+        r = self._cp_impl.cp_query(k=k, T=self.config.options.get("cp_T"))
+        return CpSearchResult(
+            r.pairs, r.distances,
+            stats=WorkStats(rounds=r.nodes_examined,
+                            candidates_verified=r.pairs_verified),
+        )
+
+
+@register_backend("flat", capabilities=("ann",))
+class FlatBackend(BaseIndex):
+    """Device-native dense pipeline (DESIGN.md §3), jit'd and batched."""
+
+    def _build(self) -> None:
+        cfg = self.config
+        self.impl = build_flat_index(self.data, m=cfg.m, seed=cfg.seed,
+                                     c=cfg.c)
+        self.use_kernels = bool(cfg.options.get("use_kernels", True))
+
+    def _search(self, q: np.ndarray, k: int) -> SearchResult:
+        T = candidate_budget(self.impl.params, self.n, k)
+        ids, dd = ann_query(self.impl, q, k=k, T=T,
+                            use_kernels=self.use_kernels)
+        return SearchResult(
+            np.asarray(ids), np.asarray(dd),
+            stats=WorkStats(rounds=q.shape[0],
+                            candidates_verified=q.shape[0] * T),
+        )
+
+
+@register_backend("sharded", capabilities=("ann", "cp"))
+class ShardedBackend(BaseIndex):
+    """The flat pipeline sharded over a device mesh ('data' axis):
+    per-shard estimate→select→verify, one all-gather tournament merge.
+
+    options: devices (mesh width, default all local devices), and the
+    usual flat/CP knobs.  The candidate budget is the same T = βn + k
+    as every other PM-LSH backend, split T/P per shard.
+    """
+
+    def _build(self) -> None:
+        import jax
+
+        from repro.compat import make_mesh
+        from repro.core.distributed import DistributedFlatIndex
+
+        cfg = self.config
+        devices = int(cfg.options.get("devices", len(jax.devices())))
+        self.mesh = cfg.options.get("mesh") or make_mesh((devices,), ("data",))
+        self.params = solve_parameters(cfg.c, m=cfg.m)
+        self.impl = DistributedFlatIndex(self.data, self.mesh, m=cfg.m,
+                                         seed=cfg.seed)
+        self._cp_impl = None
+
+    def _search(self, q: np.ndarray, k: int) -> SearchResult:
+        T = candidate_budget(self.params, self.n, k)
+        ids, dd = self.impl.query(q, k=k, T=T)
+        P = self.mesh.shape["data"]
+        local_T = self.impl.local_budget(T, k)
+        return SearchResult(
+            ids, dd,
+            stats=WorkStats(rounds=q.shape[0],
+                            candidates_verified=q.shape[0] * P * local_T),
+        )
+
+    def _cp_search(self, k: int) -> CpSearchResult:
+        if self._cp_impl is None:
+            from repro.core.distributed import DistributedCP
+
+            cfg = self.config
+            self._cp_impl = DistributedCP(self.data, self.mesh, m=cfg.m,
+                                          c=cfg.cp_c, seed=cfg.seed)
+        pairs, dd, verified = self._cp_impl.cp_query(k=k, with_stats=True)
+        return CpSearchResult(
+            pairs, dd, stats=WorkStats(candidates_verified=verified))
+
+
+# ---------------------------------------------------------------------------
+# §7 competitor baselines — generic host adapters
+# ---------------------------------------------------------------------------
+
+
+class _HostBaseline(BaseIndex):
+    """Adapter over the baseline contract:
+    query(q, k) -> (ids, dist, work) / cp_query(k) -> (pairs, dist, work).
+    """
+
+    impl_cls: type = None  # set per registered subclass
+
+    def _build(self) -> None:
+        cfg = self.config
+        kw = _ctor_kwargs(self.impl_cls, cfg, c=cfg.c, seed=cfg.seed)
+        self.impl = self.impl_cls(self.data, **kw)
+
+    def _search(self, q: np.ndarray, k: int) -> SearchResult:
+        rows, work = [], 0
+        for qi in q:
+            ids, dd, w = self.impl.query(qi, k)
+            rows.append((ids, dd))
+            work += int(w)
+        return SearchResult(
+            *pack_batch(rows, k),
+            stats=WorkStats(rounds=q.shape[0], candidates_verified=work),
+        )
+
+    def _cp_search(self, k: int) -> CpSearchResult:
+        pairs, dd, work = self.impl.cp_query(k)
+        return CpSearchResult(pairs, dd,
+                              stats=WorkStats(candidates_verified=int(work)))
+
+
+_BASELINES = [
+    # (registry name, implementation, capabilities)
+    ("multiprobe", MultiProbe, ("ann",)),
+    ("qalsh", QALSH, ("ann",)),
+    ("srs", SRS, ("ann",)),
+    ("rlsh", RLSH, ("ann",)),
+    ("lscan", LScan, ("ann",)),
+    ("lsb_tree", LSBTree, ("ann", "cp")),
+    ("acp_p", ACPP, ("cp",)),
+    ("mkcp", MkCP, ("cp",)),
+    ("nlj", NLJ, ("cp",)),
+]
+
+for _name, _impl, _caps in _BASELINES:
+    register_backend(_name, capabilities=_caps)(
+        type(
+            f"{_impl.__name__}Backend",
+            (_HostBaseline,),
+            {"impl_cls": _impl,
+             "__doc__": f"Registry adapter over baselines.{_impl.__name__}."},
+        )
+    )

@@ -1,0 +1,32 @@
+"""IndexConfig — the one knob panel shared by every backend.
+
+The fields every PM-LSH-contract index understands (approximation ratio
+c, projected dimensionality m, seed, default k) live at top level;
+anything backend-specific rides in ``options`` and is forwarded to the
+backend constructor verbatim (e.g. ``{"s": 7}`` for the PM-tree pivot
+count, ``{"use_kernels": False}`` for the flat backend on CPU,
+``{"devices": 4}`` for the sharded mesh width).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+__all__ = ["IndexConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexConfig:
+    backend: str = "flat"
+    c: float = 1.5  # ANN approximation ratio (Eq. 10 input)
+    cp_c: float = 4.0  # CP approximation ratio (§6 default)
+    m: int = 15  # hash functions / projected dims (where applicable)
+    seed: int = 0
+    default_k: int = 10  # used when search() is called without k
+    options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def replace(self, **kw) -> "IndexConfig":
+        return dataclasses.replace(self, **kw)
+
+    def with_options(self, **kw) -> "IndexConfig":
+        return dataclasses.replace(self, options={**self.options, **kw})

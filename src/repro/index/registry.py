@@ -1,0 +1,96 @@
+"""String-keyed backend registry + the build_index factory.
+
+Backends self-register:
+
+    @register_backend("flat", capabilities=("ann",))
+    class FlatBackend(BaseIndex): ...
+
+and callers never import them directly:
+
+    from repro.index import IndexConfig, build_index
+    index = build_index(data, IndexConfig(backend="flat"))
+    res = index.search(queries, k=10)
+
+The registry is also the sweep surface: benchmark tables iterate
+``available_backends("ann")`` / ``available_backends("cp")`` instead of
+maintaining per-algorithm call-shape lambdas.
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+import numpy as np
+
+from .config import IndexConfig
+from .types import Index
+
+__all__ = ["register_backend", "build_index", "available_backends",
+           "get_backend", "backend_capabilities"]
+
+_REGISTRY: dict[str, type] = {}
+_ORDER: list[str] = []  # registration order — the canonical sweep order
+
+
+def register_backend(name: str, *, capabilities: Iterable[str] = ("ann",)):
+    """Class decorator: publish a backend under ``name``.
+
+    capabilities ⊆ {"ann", "cp"} declares which of search / cp_search
+    the backend implements; sweeps filter on it.
+    """
+    caps = frozenset(capabilities)
+    if not caps <= {"ann", "cp"}:
+        raise ValueError(f"unknown capabilities {sorted(caps)}")
+
+    def deco(cls):
+        cls.backend_name = name
+        cls.capabilities = caps
+        if name not in _REGISTRY:
+            _ORDER.append(name)
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def get_backend(name: str) -> type:
+    _ensure_builtin_backends()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown index backend {name!r}; registered: "
+            f"{', '.join(_ORDER)}"
+        ) from None
+
+
+def available_backends(capability: str | None = None) -> list[str]:
+    """Registered backend names (registration order), optionally only
+    those declaring ``capability`` ("ann" or "cp")."""
+    _ensure_builtin_backends()
+    if capability is None:
+        return list(_ORDER)
+    return [n for n in _ORDER if capability in _REGISTRY[n].capabilities]
+
+
+def backend_capabilities(name: str) -> frozenset[str]:
+    return get_backend(name).capabilities
+
+
+def build_index(data, config: IndexConfig | None = None, **overrides) -> Index:
+    """Build an index over ``data`` (n, d) per ``config``.
+
+    Keyword overrides are applied on top of the config for one-liners:
+    ``build_index(data, backend="pmtree", m=20)``.
+    """
+    config = (config or IndexConfig())
+    if overrides:
+        config = config.replace(**overrides)
+    data = np.asarray(data, dtype=np.float32)
+    if data.ndim != 2:
+        raise ValueError(f"data must be (n, d), got shape {data.shape}")
+    return get_backend(config.backend)(data, config)
+
+
+def _ensure_builtin_backends() -> None:
+    # backends.py registers on import; deferred to avoid a cycle
+    from . import backends  # noqa: F401

@@ -1,0 +1,117 @@
+"""Result and protocol types shared by every index backend.
+
+The contract (DESIGN.md §4): one estimator + one candidate budget
+(T = βn + k), many probing mechanisms.  Whatever the mechanism — host
+PM-tree rounds, a dense device pass, a sharded tournament, or a
+competitor baseline — a query returns the same shapes and dtypes:
+
+  indices   (B, k) int32    — dataset ids, -1 where a backend returned
+                              fewer than k results
+  distances (B, k) float32  — original-space distances, +inf on padding
+
+so harnesses, serving steps, and tests never special-case a backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+__all__ = ["WorkStats", "SearchResult", "CpSearchResult", "Index",
+           "pack_batch"]
+
+
+@dataclasses.dataclass
+class WorkStats:
+    """Unified work accounting (paper Table 2 cost model), summed over
+    the batch.  Backends that cannot observe a counter report zero."""
+
+    rounds: int = 0  # range-query / probing rounds issued
+    candidates_verified: int = 0  # original-space point distance comps
+    node_distance_computations: int = 0  # tree-node pruning distances
+    point_distance_computations: int = 0  # leaf-scan projected distances
+
+    def __add__(self, other: "WorkStats") -> "WorkStats":
+        return WorkStats(
+            self.rounds + other.rounds,
+            self.candidates_verified + other.candidates_verified,
+            self.node_distance_computations + other.node_distance_computations,
+            self.point_distance_computations + other.point_distance_computations,
+        )
+
+    @property
+    def total_distance_computations(self) -> int:
+        return (self.candidates_verified
+                + self.node_distance_computations
+                + self.point_distance_computations)
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """Batched (c,k)-ANN answer: always (B, k), always int32/float32."""
+
+    indices: np.ndarray
+    distances: np.ndarray
+    stats: WorkStats = dataclasses.field(default_factory=WorkStats)
+
+    def __post_init__(self):
+        self.indices = np.asarray(self.indices, dtype=np.int32)
+        self.distances = np.asarray(self.distances, dtype=np.float32)
+        if self.indices.shape != self.distances.shape:
+            raise ValueError(
+                f"indices {self.indices.shape} != distances "
+                f"{self.distances.shape}"
+            )
+
+    @property
+    def batch(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.indices.shape[1]
+
+
+@dataclasses.dataclass
+class CpSearchResult:
+    """(c,k)-ACP answer: pairs (k, 2) int32, distances (k,) float32."""
+
+    pairs: np.ndarray
+    distances: np.ndarray
+    stats: WorkStats = dataclasses.field(default_factory=WorkStats)
+
+    def __post_init__(self):
+        self.pairs = np.asarray(self.pairs, dtype=np.int32).reshape(-1, 2)
+        self.distances = np.asarray(self.distances, dtype=np.float32)
+
+
+@runtime_checkable
+class Index(Protocol):
+    """What every registered backend provides (see registry.py)."""
+
+    n: int
+    d: int
+
+    def search(self, queries, k: int | None = None) -> SearchResult:
+        """Batched (c,k)-ANN: queries (B, d) or (d,) → (B, k) results."""
+        ...
+
+    def cp_search(self, k: int) -> CpSearchResult:
+        """(c,k)-ACP over the indexed data (CP-capable backends only)."""
+        ...
+
+
+def pack_batch(
+    rows: Iterable[tuple[Sequence[int], Sequence[float]]], k: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Pad per-query (ids, distances) rows into (B, k) int32/float32."""
+    rows = list(rows)
+    indices = np.full((len(rows), k), -1, dtype=np.int32)
+    distances = np.full((len(rows), k), np.inf, dtype=np.float32)
+    for b, (ids, dd) in enumerate(rows):
+        ids = np.asarray(ids).reshape(-1)[:k]
+        dd = np.asarray(dd).reshape(-1)[:k]
+        indices[b, : ids.size] = ids.astype(np.int32)
+        distances[b, : dd.size] = dd.astype(np.float32)
+    return indices, distances

@@ -14,23 +14,20 @@ from __future__ import annotations
 
 import jax
 
-
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1):
     """Tiny mesh over the locally-available devices (tests / examples)."""
     n = jax.device_count()
     model = min(model, n)
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=_auto(2))
+    return make_mesh((n // model, model), ("data", "model"))
 
 
 def dp_axes(mesh) -> tuple[str, ...]:

@@ -139,14 +139,15 @@ def lsh_decode_attention_sharded(
         out = jnp.einsum("bkgt,bktd->bkgd", p, v_all.astype(jnp.float32))
         return out.reshape(B, 1, H, hd).astype(qb.dtype)
 
+    from repro import compat
+
     seq = axes if len(axes) > 1 else axes[0]
-    return jax.shard_map(
+    return compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(P(), P(None, seq, None, None), P(None, seq, None, None),
                   P(None, seq, None, None), P(), P()),
-        out_specs=P(),
-        check_vma=False,  # output is value-replicated post merge
+        out_specs=P(),  # output is value-replicated post merge
     )(q, k, v, pk, lsh_a, jnp.asarray(kv_len, jnp.int32))
 
 

@@ -5,6 +5,11 @@ decode_32k shards the cache on batch over DP; long_500k (batch=1)
 shards the KEY SEQUENCE over 'data' — each device holds S/|data| keys
 and the PM-LSH retrieval attention's estimate/top-k runs as a
 distributed candidate search (launch/sharding.cache_pspecs).
+
+kNN-LM retrieval (`make_retrieval_step`) goes through the
+``repro.index`` facade: the datastore backend (flat on one device,
+sharded across a mesh, or any registered algorithm) is an IndexConfig
+field, not a code path.
 """
 from __future__ import annotations
 
@@ -16,6 +21,31 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.launch.sharding import batch_shardings, cache_shardings, param_shardings
 from repro.models import model_module
+
+
+def make_retrieval_step(keys, values, *, k: int = 8,
+                        index_config: "IndexConfig | None" = None):
+    """Batched kNN-LM retrieval over a (hidden-state → payload) datastore.
+
+    Builds one facade index over ``keys`` (n, d) and returns
+    ``retrieve(queries) -> (payloads (B, k), distances (B, k), SearchResult)``
+    where ``payloads = values[indices]`` (next-token ids in kNN-LM).
+    Swap backends — flat, sharded, pmtree, any registered baseline —
+    via ``index_config`` without touching the serving loop.
+    """
+    import numpy as np
+
+    from repro.index import IndexConfig, build_index
+
+    values = np.asarray(values)
+    index = build_index(keys, index_config or IndexConfig(backend="flat"))
+
+    def retrieve(queries):
+        res = index.search(queries, k=k)
+        payload = values[np.clip(res.indices, 0, len(values) - 1)]
+        return payload, res.distances, res
+
+    return retrieve, index
 
 
 def make_prefill(cfg, mesh, *, batch: int, seq_len: int, max_seq: int | None = None):

@@ -124,16 +124,17 @@ def make_compressed_train_step(cfg, mesh, opt_cfg, *, axis: str = "data"):
         return jax.tree.map(lambda _: P(), tree)
 
     def wrapped(params, opt_state, residuals, batch):
+        from repro import compat
+
         batch_specs = {k: P(axis, *([None] * (v.ndim - 1)))
                        for k, v in batch.items()}
-        return jax.shard_map(
+        return compat.shard_map(
             step,
             mesh=mesh,
             in_specs=(spec_of(params), spec_of(opt_state), spec_of(residuals),
                       batch_specs),
             out_specs=(spec_of(params), spec_of(opt_state), spec_of(residuals),
                        {"loss": P(), "grad_norm": P(), "lr": P()}),
-            check_vma=False,
             axis_names=manual,
         )(params, opt_state, residuals, batch)
 

@@ -38,8 +38,8 @@ class TestDistributedANN:
     def test_sharded_index_recall(self):
         out = _run("""
         from repro.core.distributed import DistributedFlatIndex
-        mesh = jax.make_mesh((8,), ('data',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh
+        mesh = make_mesh((8,), ('data',))
         rng = np.random.default_rng(0)
         centers = rng.normal(size=(20, 32)) * 4
         data = (centers[rng.integers(0, 20, 2000)]
@@ -58,8 +58,8 @@ class TestDistributedANN:
     def test_ring_cp(self):
         out = _run("""
         from repro.core.distributed import DistributedCP
-        mesh = jax.make_mesh((8,), ('data',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh
+        mesh = make_mesh((8,), ('data',))
         rng = np.random.default_rng(1)
         centers = rng.normal(size=(10, 24)) * 4
         data = (centers[rng.integers(0, 10, 600)]
@@ -86,15 +86,19 @@ class TestDistributedTraining:
         from repro.configs import get_smoke_config
         from repro.models import model_module
         from repro.train.train_step import make_train_step
-        from repro.train.optimizer import init_opt_state
-        mesh = jax.make_mesh((4, 2), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.train.optimizer import AdamWConfig, init_opt_state
+        from repro.compat import make_mesh
+        mesh = make_mesh((4, 2), ('data', 'model'))
         cfg = get_smoke_config('qwen3_moe_30b_a3b')
         mod = model_module(cfg)
         specs = {'tokens': jax.ShapeDtypeStruct((8, 64), jnp.int32),
                  'labels': jax.ShapeDtypeStruct((8, 64), jnp.int32)}
+        # no warmup: with the default 100-step warmup the first steps
+        # run at lr ~ 0 and the loss delta is numerical noise
         step, info = make_train_step(cfg, mesh, batch_specs=specs,
-                                     donate=False)
+                                     donate=False,
+                                     opt_cfg=AdamWConfig(lr=1e-3,
+                                                         warmup_steps=1))
         params = mod.init_params(cfg, jax.random.PRNGKey(0))
         opt = init_opt_state(params)
         rng = np.random.default_rng(0)
@@ -116,8 +120,8 @@ class TestDistributedTraining:
         from repro.train.optimizer import AdamWConfig, init_opt_state
         from repro.train.grad_compression import (
             make_compressed_train_step, init_residuals)
-        mesh = jax.make_mesh((8,), ('data',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh
+        mesh = make_mesh((8,), ('data',))
         cfg = get_smoke_config('yi_6b')
         mod = model_module(cfg)
         params = mod.init_params(cfg, jax.random.PRNGKey(0))
@@ -142,8 +146,8 @@ class TestDistributedTraining:
         from repro.configs import get_smoke_config
         from repro.models import model_module
         from repro.serve.serve_step import make_prefill, make_decode_step
-        mesh = jax.make_mesh((4, 2), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.compat import make_mesh
+        mesh = make_mesh((4, 2), ('data', 'model'))
         cfg = get_smoke_config('recurrentgemma_9b')
         mod = model_module(cfg)
         pf, _ = make_prefill(cfg, mesh, batch=4, seq_len=16, max_seq=32)

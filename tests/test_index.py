@@ -1,0 +1,214 @@
+"""The repro.index facade: registry, protocol compliance, backend
+parity, and the unified dtype contract (int32 indices / float32
+distances everywhere)."""
+import numpy as np
+import pytest
+
+from conftest import make_clustered
+from repro.index import (
+    CpSearchResult,
+    IndexConfig,
+    SearchResult,
+    WorkStats,
+    available_backends,
+    backend_capabilities,
+    build_index,
+)
+
+K = 10
+EPS = 0.1  # parity slack vs the paper-faithful pmtree path
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    return make_clustered(1500, 32, n_clusters=20, seed=0)
+
+
+@pytest.fixture(scope="module")
+def queries(dataset):
+    rng = np.random.default_rng(1)
+    return dataset[rng.integers(0, len(dataset), 7)] + 0.05
+
+
+@pytest.fixture(scope="module")
+def exact(dataset, queries):
+    d = np.linalg.norm(dataset[None] - queries[:, None], axis=-1)
+    return np.argsort(d, axis=1)[:, :K]
+
+
+def _recall(res, exact_ids):
+    recs = [
+        len(set(row.tolist()) & set(ex.tolist())) / len(ex)
+        for row, ex in zip(res.indices, exact_ids)
+    ]
+    return float(np.mean(recs))
+
+
+class TestRegistry:
+    def test_core_backends_registered(self):
+        names = available_backends()
+        for required in ("pmtree", "flat", "sharded"):
+            assert required in names
+
+    def test_at_least_four_baselines(self):
+        baselines = set(available_backends()) - {"pmtree", "flat", "sharded"}
+        assert len(baselines) >= 4, baselines
+
+    def test_capabilities(self):
+        assert "ann" in backend_capabilities("flat")
+        assert "cp" in backend_capabilities("pmtree")
+        assert "cp" in backend_capabilities("nlj")
+        assert "ann" not in backend_capabilities("nlj")
+
+    def test_unknown_backend(self, dataset):
+        with pytest.raises(KeyError, match="unknown index backend"):
+            build_index(dataset, IndexConfig(backend="no_such"))
+
+    def test_capability_guard(self, dataset):
+        with pytest.raises(NotImplementedError):
+            build_index(dataset[:100], backend="nlj").search(dataset[:1], 3)
+        with pytest.raises(NotImplementedError):
+            build_index(dataset[:100], backend="flat").cp_search(3)
+
+
+class TestBackendParity:
+    """pmtree / flat / sharded (1-device mesh) over the same seeded data:
+    identical shapes + dtypes for B ∈ {1, 7}, recall within ε of the
+    paper-faithful pmtree path."""
+
+    @pytest.fixture(scope="class")
+    def indexes(self, dataset):
+        cfg = IndexConfig(c=1.5, m=15, seed=0)
+        return {
+            "pmtree": build_index(dataset, cfg.replace(backend="pmtree")),
+            "flat": build_index(
+                dataset,
+                cfg.replace(backend="flat", options={"use_kernels": False}),
+            ),
+            "sharded": build_index(
+                dataset,
+                cfg.replace(backend="sharded", options={"devices": 1}),
+            ),
+        }
+
+    @pytest.mark.parametrize("batch", [1, 7])
+    def test_shapes_and_dtypes(self, indexes, queries, batch):
+        shapes = {}
+        for name, index in indexes.items():
+            res = index.search(queries[:batch], K)
+            assert isinstance(res, SearchResult)
+            assert res.indices.dtype == np.int32, name
+            assert res.distances.dtype == np.float32, name
+            shapes[name] = (res.indices.shape, res.distances.shape)
+        assert set(shapes.values()) == {((batch, K), (batch, K))}
+
+    def test_recall_parity(self, indexes, queries, exact):
+        ref = _recall(indexes["pmtree"].search(queries, K), exact)
+        assert ref >= 0.6  # the reference itself must be sane
+        for name in ("flat", "sharded"):
+            rec = _recall(indexes[name].search(queries, K), exact)
+            assert rec >= ref - EPS, f"{name}: {rec} vs pmtree {ref}"
+
+    def test_distances_are_true_distances(self, indexes, dataset, queries):
+        for name, index in indexes.items():
+            res = index.search(queries[:2], 5)
+            for b in range(2):
+                for i, d in zip(res.indices[b], res.distances[b]):
+                    true = np.linalg.norm(dataset[i] - queries[b])
+                    assert d == pytest.approx(true, rel=1e-4), name
+
+    def test_single_query_is_batch_of_one(self, indexes, queries):
+        for index in indexes.values():
+            res = index.search(queries[0], 5)
+            assert res.indices.shape == (1, 5)
+
+
+class TestBaselineProtocol:
+    @pytest.mark.parametrize("backend", ["multiprobe", "qalsh", "srs",
+                                         "rlsh", "lscan", "lsb_tree"])
+    def test_uniform_ann_contract(self, backend, dataset, queries):
+        index = build_index(dataset, IndexConfig(backend=backend, seed=0))
+        res = index.search(queries, 5)
+        assert res.indices.shape == (7, 5)
+        assert res.indices.dtype == np.int32
+        assert res.distances.dtype == np.float32
+        valid = res.indices >= 0
+        assert np.isfinite(res.distances[valid]).all()
+        assert (res.distances[~valid] == np.inf).all()
+        assert isinstance(res.stats, WorkStats)
+
+    @pytest.mark.parametrize("backend", ["pmtree", "lsb_tree", "acp_p",
+                                         "nlj"])
+    def test_uniform_cp_contract(self, backend, dataset):
+        index = build_index(dataset[:300], IndexConfig(backend=backend,
+                                                       seed=0))
+        res = index.cp_search(4)
+        assert isinstance(res, CpSearchResult)
+        assert res.pairs.shape == (4, 2)
+        assert res.pairs.dtype == np.int32
+        assert res.distances.dtype == np.float32
+        assert (res.pairs[:, 0] != res.pairs[:, 1]).all()
+
+
+class TestWorkStats:
+    def test_pmtree_counters_populated(self, dataset, queries):
+        index = build_index(dataset, backend="pmtree")
+        res = index.search(queries, K)
+        assert res.stats.rounds >= len(queries)
+        assert res.stats.candidates_verified > 0
+        assert res.stats.node_distance_computations > 0
+        assert res.stats.total_distance_computations >= (
+            res.stats.candidates_verified
+        )
+
+    def test_flat_budget_accounting(self, dataset):
+        from repro.core import candidate_budget
+
+        index = build_index(
+            dataset, IndexConfig(backend="flat",
+                                 options={"use_kernels": False})
+        )
+        res = index.search(dataset[:3], 5)
+        T = candidate_budget(index.impl.params, len(dataset), 5)
+        assert res.stats.candidates_verified == 3 * T
+
+
+class TestDtypeNormalization:
+    """Satellite: every result path emits float32 / int32."""
+
+    def test_ann_result_dtypes(self, dataset):
+        from repro.core import PMLSH
+
+        res = PMLSH(dataset, c=1.5, m=15, seed=0).ann_query(dataset[0], k=5)
+        assert res.indices.dtype == np.int32
+        assert res.distances.dtype == np.float32
+
+    def test_cp_result_dtypes(self, dataset):
+        from repro.core import PMLSH_CP
+
+        res = PMLSH_CP(dataset[:300], c=4.0, m=15, seed=0).cp_query(k=3)
+        assert res.pairs.dtype == np.int32
+        assert res.distances.dtype == np.float32
+
+    def test_flat_params_cached_at_build(self, dataset):
+        from repro.core import build_flat_index
+
+        fi = build_flat_index(dataset[:200], m=15, seed=0)
+        assert fi.params is not None and fi.params.c == 1.5
+
+
+class TestConfig:
+    def test_default_k(self, dataset):
+        index = build_index(dataset[:200],
+                            IndexConfig(backend="lscan", default_k=4))
+        assert index.search(dataset[:1]).k == 4
+
+    def test_options_reach_backend(self, dataset):
+        index = build_index(
+            dataset, IndexConfig(backend="pmtree", options={"s": 3})
+        )
+        assert index.impl.tree.n_pivots == 3
+
+    def test_build_index_overrides(self, dataset):
+        index = build_index(dataset[:200], backend="lscan")
+        assert index.backend_name == "lscan"
