@@ -27,6 +27,7 @@ MODULES = [
     ("table6_cp", "benchmarks.cp_queries"),
     ("figs7_14_16_gamma", "benchmarks.gamma_study"),
     ("kernel_micro", "benchmarks.kernel_micro"),
+    ("stream_queries", "benchmarks.stream_queries"),
 ]
 
 

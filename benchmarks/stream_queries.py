@@ -1,0 +1,75 @@
+"""Streaming-index benchmark: sustained recall/latency under churn.
+
+An interleaved insert + delete + query workload against the
+``"streaming"`` backend: each round appends a batch (forcing flushes
+and, eventually, compactions), tombstones a slice of the live set, and
+then times a query batch, scoring recall against an exact scan over the
+CURRENT live points.  This is the serving regime the static tables
+cannot measure — the index mutates between every query batch.
+
+Rows: one per round (recall, us/query, segment/delta/live occupancy)
+plus a sustained summary across rounds.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import csv_row, timer
+
+
+def run(quick: bool = True):
+    from repro.index import IndexConfig, build_index
+
+    rng = np.random.default_rng(0)
+    n0, d = (2000, 32) if quick else (20000, 64)
+    rounds = 6 if quick else 20
+    insert_batch = 250 if quick else 2000
+    delete_frac = 0.05
+    B, k = 8, 10
+
+    def make(n):
+        centers = rng.normal(size=(16, d)).astype(np.float32) * 4
+        return (centers[rng.integers(0, 16, n)]
+                + rng.normal(size=(n, d)).astype(np.float32) * 0.5)
+
+    index = build_index(
+        make(n0),
+        IndexConfig(backend="streaming", c=1.5, m=15, seed=0,
+                    options={"delta_threshold": 256 if quick else 2048,
+                             "max_segments": 4}),
+    )
+
+    out, recs, lats = [], [], []
+    for r in range(rounds):
+        index.insert(make(insert_batch))
+        live = index.live_ids()
+        index.delete(rng.choice(live, int(len(live) * delete_frac),
+                                replace=False))
+
+        live = index.live_ids()
+        vectors = index.get_vectors(live)
+        queries = (vectors[rng.integers(0, len(live), B)]
+                   + rng.normal(size=(B, d)).astype(np.float32) * 0.05)
+        res, dt = timer(index.search, queries, k)
+
+        dd = np.linalg.norm(vectors[None] - queries[:, None], axis=-1)
+        exact = live[np.argsort(dd, axis=1)[:, :k]]
+        rec = float(np.mean([
+            len(set(row.tolist()) & set(ex.tolist())) / k
+            for row, ex in zip(res.indices, exact)
+        ]))
+        recs.append(rec)
+        lats.append(dt / B)
+        out.append(csv_row(
+            f"stream_round{r}", dt / B * 1e6,
+            "recall=%.3f;live=%d;segments=%d;delta=%d;verified=%d"
+            % (rec, index.n, index.segment_count, index.delta_size,
+               res.stats.candidates_verified),
+        ))
+
+    out.append(csv_row(
+        "stream_sustained", float(np.mean(lats)) * 1e6,
+        "recall=%.3f;flushes=%d;compactions=%d;live=%d"
+        % (np.mean(recs), index.n_flushes, index.n_compactions, index.n),
+    ))
+    return out

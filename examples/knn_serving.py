@@ -2,7 +2,8 @@
 states augments next-token prediction (Khandelwal et al.'s pattern with
 the paper's index as the datastore).  The datastore goes through the
 ``repro.index`` facade via ``serve.make_retrieval_step``, so the
-backend (flat / sharded / pmtree / ...) is a config field.
+backend (flat / sharded / pmtree / streaming / ...) is a config field;
+the streaming backend lets the datastore grow and evict while serving.
 
     PYTHONPATH=src python examples/knn_serving.py
 """
@@ -31,7 +32,7 @@ def main():
 
     retrieve, index = make_retrieval_step(
         keys, next_tokens, k=8,
-        index_config=IndexConfig(backend="flat", c=1.5, m=15, seed=0),
+        index_config=IndexConfig(backend="streaming", c=1.5, m=15, seed=0),
     )
 
     # ---- serve: blend parametric logits with kNN retrieval -------------
@@ -40,10 +41,11 @@ def main():
     q = np.asarray(hidden_q[:, -1], np.float32)  # (1, d)
     logits, _ = mod.forward(params, prompt, cfg, logits_slice="last")
 
-    payload, dists, _ = retrieve(q)
-    knn_tokens, dists = payload[0], dists[0]
-    # kernel-weighted vote over retrieved next tokens
-    w = np.exp(-dists / max(dists.mean(), 1e-6))
+    payload, valid, dists, _ = retrieve(q)
+    knn_tokens, ok, dists = payload[0], valid[0], dists[0]
+    # kernel-weighted vote over retrieved next tokens (masked on validity
+    # — padded slots must not vote)
+    w = np.where(ok, np.exp(-dists / max(dists[ok].mean(), 1e-6)), 0.0)
     knn_probs = np.zeros(cfg.padded_vocab())
     for t, wi in zip(knn_tokens, w):
         knn_probs[t] += wi
@@ -56,6 +58,18 @@ def main():
           f"(distances {np.round(dists, 3).tolist()})")
     print(f"parametric argmax {int(par_probs.argmax())} → "
           f"blended argmax {int(blended.argmax())} (λ={lam})")
+
+    # ---- grow the datastore while serving (streaming backend) ----------
+    more = jnp.array(rng.integers(0, cfg.vocab_size, (8, 64)), jnp.int32)
+    hidden2, _ = mod.forward(params, more, cfg, logits_slice="hidden")
+    new_keys = np.asarray(hidden2[:, :-1].reshape(-1, cfg.d_model),
+                          np.float32)
+    new_tokens = np.asarray(more[:, 1:]).reshape(-1)
+    ids = retrieve.extend(new_keys, new_tokens)
+    retrieve.evict(ids[:16])  # and retire stale entries, no rebuild
+    payload, valid, dists, _ = retrieve(q)
+    print(f"datastore grew to {index.n} live pairs ({index!r}); "
+          f"retrieval still serves: {payload[0][valid[0]].tolist()}")
 
 
 if __name__ == "__main__":

@@ -4,7 +4,10 @@ Imports every registered backend, builds it over a seeded 256×32
 dataset, runs one batched ANN search (and one cp_search where the
 backend is CP-capable), and asserts the uniform contract: (B, k) int32
 indices / float32 distances, true original-space distances, WorkStats
-attached.  Exits non-zero on the first violation.
+attached.  "stream"-capable backends additionally get a mutation
+conformance pass: insert→search visibility (before AND after flush),
+delete→absence (before and after compaction-inducing churn), and live
+count accounting.  Exits non-zero on the first violation.
 
     PYTHONPATH=src python scripts/check_api.py
 """
@@ -14,6 +17,39 @@ import sys
 import time
 
 import numpy as np
+
+
+def check_stream(index, data, rng) -> None:
+    """Mutation conformance for a "stream"-capable backend."""
+    from repro.index import MutableIndex
+
+    assert isinstance(index, MutableIndex), "missing insert/delete/flush"
+    n_before = index.n
+    d = data.shape[1]
+    # insert → visibility: a far-off cluster must come back as its ids
+    probe = np.full((1, d), 37.0, dtype=np.float32)
+    new = index.insert(probe + rng.normal(size=(3, d)).astype(np.float32)
+                       * 0.01)
+    assert len(new) == 3 and index.n == n_before + 3
+    res = index.search(probe, 3)
+    assert set(res.indices[0].tolist()) == set(int(i) for i in new), (
+        f"inserted ids {new.tolist()} not visible: {res.indices[0]}")
+    # delete → absence (still in the delta)
+    assert index.delete(new[:1]) == 1
+    assert int(new[0]) not in index.search(probe, 5).indices
+    # flush → still visible / still absent
+    index.flush()
+    res = index.search(probe, 2)
+    assert set(res.indices[0].tolist()) == set(int(i) for i in new[1:])
+    # delete sealed rows, then churn through flush/compaction cycles
+    assert index.delete(new[1:]) == 2
+    for _ in range(4):
+        index.insert(rng.normal(size=(64, d)).astype(np.float32))
+        index.flush()
+    res = index.search(probe, 10)
+    for i in new:
+        assert int(i) not in res.indices, f"tombstoned id {i} returned"
+    assert index.delete(new) == 0  # re-delete is a no-op
 
 
 def main() -> int:
@@ -66,6 +102,9 @@ def main() -> int:
                 assert res.distances.dtype == np.float32
                 assert (res.pairs[:, 0] != res.pairs[:, 1]).all()
                 checked.append("cp")
+            if "stream" in caps:
+                check_stream(index, data, rng)
+                checked.append("stream")
             dt = time.perf_counter() - t0
             print(f"  ok   {backend:12s} [{', '.join(checked)}] {dt:.2f}s")
         except Exception as e:  # noqa: BLE001 - report and keep sweeping

@@ -14,11 +14,14 @@ study — behind one batched API:
     cp = build_index(data, IndexConfig(backend="pmtree")).cp_search(k=10)
 
 Backends register by name (``available_backends()`` lists them):
-pmtree, flat, sharded, plus the §7 baselines (multiprobe, qalsh, srs,
-rlsh, lscan, lsb_tree, acp_p, mkcp, nlj).  See DESIGN.md §4.
+pmtree, flat, sharded, streaming (the mutable LSM layer from
+``repro.stream`` — insert/delete/flush behind the same contract), plus
+the §7 baselines (multiprobe, qalsh, srs, rlsh, lscan, lsb_tree,
+acp_p, mkcp, nlj).  See DESIGN.md §4 and §7.
 """
 from .config import IndexConfig  # noqa: F401
 from .registry import (  # noqa: F401
+    KNOWN_CAPABILITIES,
     available_backends,
     backend_capabilities,
     build_index,
@@ -28,6 +31,7 @@ from .registry import (  # noqa: F401
 from .types import (  # noqa: F401
     CpSearchResult,
     Index,
+    MutableIndex,
     SearchResult,
     WorkStats,
     pack_batch,

@@ -5,14 +5,58 @@ c, projected dimensionality m, seed, default k) live at top level;
 anything backend-specific rides in ``options`` and is forwarded to the
 backend constructor verbatim (e.g. ``{"s": 7}`` for the PM-tree pivot
 count, ``{"use_kernels": False}`` for the flat backend on CPU,
-``{"devices": 4}`` for the sharded mesh width).
+``{"devices": 4}`` for the sharded mesh width, ``{"delta_threshold":
+256}`` for the streaming flush trigger).
+
+``options`` is normalized to an immutable ``FrozenOptions`` mapping at
+construction: the caller's dict is copied (no aliasing — mutating it
+later cannot change the config) and the config stays hashable, so it
+works as a cache / sweep key.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Mapping
+from typing import Any, Iterator, Mapping
 
-__all__ = ["IndexConfig"]
+__all__ = ["IndexConfig", "FrozenOptions"]
+
+
+class FrozenOptions(Mapping):
+    """Immutable, hashable Mapping — the normal form of ``options``."""
+
+    __slots__ = ("_items", "_hash")
+
+    def __init__(self, items: Mapping[str, Any] | None = None):
+        object.__setattr__(self, "_items", dict(items or {}))
+        object.__setattr__(self, "_hash", None)
+
+    def __getitem__(self, key: str) -> Any:
+        return self._items[key]
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._items)
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def __hash__(self) -> int:
+        if self._hash is None:
+            object.__setattr__(
+                self, "_hash",
+                hash(frozenset(self._items.items())),
+            )
+        return self._hash
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, Mapping):
+            return dict(self._items) == dict(other)
+        return NotImplemented
+
+    def __setattr__(self, *_):  # pragma: no cover - defensive
+        raise TypeError("FrozenOptions is immutable")
+
+    def __repr__(self) -> str:
+        return f"FrozenOptions({self._items!r})"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -23,7 +67,12 @@ class IndexConfig:
     m: int = 15  # hash functions / projected dims (where applicable)
     seed: int = 0
     default_k: int = 10  # used when search() is called without k
-    options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    options: Mapping[str, Any] = dataclasses.field(
+        default_factory=FrozenOptions)
+
+    def __post_init__(self):
+        if not isinstance(self.options, FrozenOptions):
+            object.__setattr__(self, "options", FrozenOptions(self.options))
 
     def replace(self, **kw) -> "IndexConfig":
         return dataclasses.replace(self, **kw)

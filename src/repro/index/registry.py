@@ -25,20 +25,27 @@ from .config import IndexConfig
 from .types import Index
 
 __all__ = ["register_backend", "build_index", "available_backends",
-           "get_backend", "backend_capabilities"]
+           "get_backend", "backend_capabilities", "KNOWN_CAPABILITIES"]
 
 _REGISTRY: dict[str, type] = {}
 _ORDER: list[str] = []  # registration order — the canonical sweep order
 
 
+#: the capability vocabulary sweeps and conformance gates filter on:
+#: "ann" — batched search(); "cp" — cp_search(); "stream" — mutable
+#: insert()/delete()/flush() on top of "ann"
+KNOWN_CAPABILITIES = frozenset({"ann", "cp", "stream"})
+
+
 def register_backend(name: str, *, capabilities: Iterable[str] = ("ann",)):
     """Class decorator: publish a backend under ``name``.
 
-    capabilities ⊆ {"ann", "cp"} declares which of search / cp_search
-    the backend implements; sweeps filter on it.
+    capabilities ⊆ KNOWN_CAPABILITIES declares which of search /
+    cp_search / insert-delete-flush the backend implements; sweeps
+    filter on it.
     """
     caps = frozenset(capabilities)
-    if not caps <= {"ann", "cp"}:
+    if not caps <= KNOWN_CAPABILITIES:
         raise ValueError(f"unknown capabilities {sorted(caps)}")
 
     def deco(cls):
@@ -92,5 +99,7 @@ def build_index(data, config: IndexConfig | None = None, **overrides) -> Index:
 
 
 def _ensure_builtin_backends() -> None:
-    # backends.py registers on import; deferred to avoid a cycle
+    # backends.py / repro.stream register on import; deferred to avoid
+    # a cycle
     from . import backends  # noqa: F401
+    import repro.stream  # noqa: F401

@@ -19,7 +19,7 @@ from typing import Iterable, Protocol, Sequence, runtime_checkable
 import numpy as np
 
 __all__ = ["WorkStats", "SearchResult", "CpSearchResult", "Index",
-           "pack_batch"]
+           "MutableIndex", "pack_batch"]
 
 
 @dataclasses.dataclass
@@ -99,6 +99,25 @@ class Index(Protocol):
 
     def cp_search(self, k: int) -> CpSearchResult:
         """(c,k)-ACP over the indexed data (CP-capable backends only)."""
+        ...
+
+
+@runtime_checkable
+class MutableIndex(Index, Protocol):
+    """What "stream"-capable backends additionally provide."""
+
+    def insert(self, points) -> np.ndarray:
+        """Append rows; returns their new global ids (n,).  Inserted
+        points are visible to search immediately."""
+        ...
+
+    def delete(self, ids) -> int:
+        """Tombstone ids (never returned again); returns the number
+        that were live."""
+        ...
+
+    def flush(self) -> None:
+        """Seal buffered inserts into immutable storage."""
         ...
 
 

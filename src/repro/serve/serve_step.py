@@ -8,8 +8,9 @@ distributed candidate search (launch/sharding.cache_pspecs).
 
 kNN-LM retrieval (`make_retrieval_step`) goes through the
 ``repro.index`` facade: the datastore backend (flat on one device,
-sharded across a mesh, or any registered algorithm) is an IndexConfig
-field, not a code path.
+sharded across a mesh, streaming for online growth, or any registered
+algorithm) is an IndexConfig field, not a code path.  Results carry an
+explicit validity mask — padded (-1) slots never alias row 0's payload.
 """
 from __future__ import annotations
 
@@ -23,29 +24,95 @@ from repro.launch.sharding import batch_shardings, cache_shardings, param_shardi
 from repro.models import model_module
 
 
-def make_retrieval_step(keys, values, *, k: int = 8,
-                        index_config: "IndexConfig | None" = None):
+class RetrievalStep:
     """Batched kNN-LM retrieval over a (hidden-state → payload) datastore.
 
-    Builds one facade index over ``keys`` (n, d) and returns
-    ``retrieve(queries) -> (payloads (B, k), distances (B, k), SearchResult)``
-    where ``payloads = values[indices]`` (next-token ids in kNN-LM).
-    Swap backends — flat, sharded, pmtree, any registered baseline —
-    via ``index_config`` without touching the serving loop.
+    Calling the step runs one facade search and gathers payloads:
+
+        payloads, valid, distances, res = step(queries)
+
+    ``payloads`` is ``values[indices]`` with padded slots gathered from
+    row 0 as a placeholder; ``valid`` is the (B, k) bool mask that says
+    which slots are real — callers MUST mask on it (a backend that
+    returns fewer than k hits pads indices with -1, and the padding
+    must not leak row 0's payload into the blend).
+
+    When the backend is "stream"-capable (``backend="streaming"``), the
+    datastore grows online: ``step.extend(new_keys, new_values)``
+    inserts rows into the live index and appends the matching payloads,
+    and ``step.evict(ids)`` tombstones stale entries — no rebuild, no
+    serving pause.  Payloads are addressed by the index's global ids,
+    which are append-order and never recycled, so the value store is a
+    plain append-only array.
     """
-    import numpy as np
 
-    from repro.index import IndexConfig, build_index
+    def __init__(self, keys, values, *, k: int = 8,
+                 index_config: "IndexConfig | None" = None):
+        import numpy as np
 
-    values = np.asarray(values)
-    index = build_index(keys, index_config or IndexConfig(backend="flat"))
+        from repro.index import IndexConfig, build_index
 
-    def retrieve(queries):
-        res = index.search(queries, k=k)
-        payload = values[np.clip(res.indices, 0, len(values) - 1)]
-        return payload, res.distances, res
+        self.k = int(k)
+        self.values = np.asarray(values)
+        keys = np.asarray(keys, dtype=np.float32)
+        if len(self.values) != len(keys):
+            raise ValueError(
+                f"{len(keys)} keys for {len(self.values)} payloads")
+        self.index = build_index(keys,
+                                 index_config or IndexConfig(backend="flat"))
 
-    return retrieve, index
+    @property
+    def streaming(self) -> bool:
+        return "stream" in getattr(self.index, "capabilities", frozenset())
+
+    def __call__(self, queries):
+        import numpy as np
+
+        res = self.index.search(queries, k=self.k)
+        valid = res.indices >= 0
+        payload = self.values[np.where(valid, res.indices, 0)]
+        return payload, valid, res.distances, res
+
+    def extend(self, new_keys, new_values):
+        """Insert (key → payload) rows into a streaming datastore;
+        returns the new global ids.  New rows are retrievable at once."""
+        import numpy as np
+
+        if not self.streaming:
+            raise NotImplementedError(
+                f"backend {self.index.backend_name!r} is build-once; use "
+                "IndexConfig(backend='streaming') for an online datastore")
+        new_values = np.asarray(new_values)
+        new_keys = np.asarray(new_keys, dtype=np.float32).reshape(
+            -1, self.index.d)
+        if len(new_values) != len(new_keys):
+            raise ValueError(
+                f"{len(new_keys)} keys for {len(new_values)} payloads")
+        ids = self.index.insert(new_keys)
+        self.values = np.concatenate([self.values, new_values], axis=0)
+        return ids
+
+    def evict(self, ids) -> int:
+        """Tombstone datastore entries (streaming backends only)."""
+        if not self.streaming:
+            raise NotImplementedError(
+                f"backend {self.index.backend_name!r} is build-once")
+        return self.index.delete(ids)
+
+
+def make_retrieval_step(keys, values, *, k: int = 8,
+                        index_config: "IndexConfig | None" = None):
+    """Build a :class:`RetrievalStep` over ``keys`` (n, d) / ``values``.
+
+    Returns ``(step, step.index)``; ``step(queries)`` yields
+    ``(payloads (B, k), valid (B, k) bool, distances (B, k),
+    SearchResult)``.  Swap backends — flat, sharded, pmtree, streaming,
+    any registered baseline — via ``index_config`` without touching the
+    serving loop; with ``backend="streaming"`` the datastore accepts
+    ``step.extend`` / ``step.evict`` while queries run.
+    """
+    step = RetrievalStep(keys, values, k=k, index_config=index_config)
+    return step, step.index
 
 
 def make_prefill(cfg, mesh, *, batch: int, seq_len: int, max_seq: int | None = None):

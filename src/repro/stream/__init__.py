@@ -1,0 +1,23 @@
+"""repro.stream — a mutable streaming index behind the Index facade.
+
+Every other backend in the registry is build-once/read-only; serving
+datastores (the kNN-LM store in ``make_retrieval_step``) are
+append-heavy by nature.  This package adds an LSM-style layer on top of
+the existing static backends:
+
+    delta buffer   — mutable tail, served by a brute-force kernel scan
+    segments       — sealed immutable runs, each a registered static
+                     backend (pmtree by default) over its points
+    tombstones     — deletes are an id-set applied at merge time
+    compaction     — threshold-triggered rebuild of small segments
+                     into one larger segment (tombstones dropped)
+
+``StreamingIndex`` satisfies the ``Index`` protocol plus ``insert`` /
+``delete`` / ``flush`` and registers as backend ``"streaming"`` with
+capabilities ``("ann", "stream")``.  See DESIGN.md §7.
+"""
+from .delta import DeltaBuffer  # noqa: F401
+from .segment import Segment  # noqa: F401
+from .index import StreamingIndex  # noqa: F401
+
+__all__ = ["DeltaBuffer", "Segment", "StreamingIndex"]

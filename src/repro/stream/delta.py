@@ -1,0 +1,75 @@
+"""The mutable delta buffer: the LSM memtable of the streaming index.
+
+Freshly inserted points live here until ``StreamingIndex.flush`` seals
+them into an immutable segment.  Queries against the delta are a
+brute-force exact scan through the shared kernel surface
+(``repro.kernels.ops``): pairwise distances on the MXU path where
+available, the jnp oracle elsewhere — the same estimate-free VERIFY
+step every backend ends with, just over a small buffer.
+
+Deletes of ids still in the delta need no tombstone: the row is
+physically dropped on the spot.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.index.types import WorkStats
+
+__all__ = ["DeltaBuffer"]
+
+
+class DeltaBuffer:
+    """Append-mostly (id, vector) buffer with exact top-k scan."""
+
+    def __init__(self, d: int):
+        self.d = int(d)
+        self.ids = np.empty((0,), dtype=np.int64)
+        self.vectors = np.empty((0, self.d), dtype=np.float32)
+
+    def __len__(self) -> int:
+        return self.ids.size
+
+    def insert(self, ids: np.ndarray, vectors: np.ndarray) -> None:
+        vectors = np.asarray(vectors, dtype=np.float32).reshape(-1, self.d)
+        ids = np.asarray(ids, dtype=np.int64).reshape(-1)
+        if ids.size != vectors.shape[0]:
+            raise ValueError(f"{ids.size} ids for {vectors.shape[0]} rows")
+        self.ids = np.concatenate([self.ids, ids])
+        self.vectors = np.concatenate([self.vectors, vectors], axis=0)
+
+    def delete(self, ids) -> np.ndarray:
+        """Physically drop rows whose id is in ``ids``; returns the
+        (possibly empty) array of ids actually removed."""
+        ids = np.asarray(ids, dtype=np.int64).reshape(-1)
+        hit = np.isin(self.ids, ids)
+        removed = self.ids[hit]
+        if removed.size:
+            self.ids = self.ids[~hit]
+            self.vectors = self.vectors[~hit]
+        return removed
+
+    def take(self) -> tuple[np.ndarray, np.ndarray]:
+        """Drain the buffer: returns (ids, vectors) and resets to empty."""
+        ids, vectors = self.ids, self.vectors
+        self.ids = np.empty((0,), dtype=np.int64)
+        self.vectors = np.empty((0, self.d), dtype=np.float32)
+        return ids, vectors
+
+    def search(self, q: np.ndarray, k: int, *, force: str | None = None
+               ) -> tuple[np.ndarray, np.ndarray, WorkStats]:
+        """Exact top-k over the buffer: (global ids (B,k'), distances
+        (B,k'), WorkStats) with k' = min(k, len(self))."""
+        from repro.kernels import ops
+
+        B = q.shape[0]
+        kk = min(int(k), len(self))
+        if kk == 0:
+            return (np.empty((B, 0), np.int64), np.empty((B, 0), np.float32),
+                    WorkStats())
+        d2 = ops.pairwise_sq_dist(q, self.vectors, force=force)
+        vals, idx = ops.topk_smallest(d2, kk, force=force)
+        gids = self.ids[np.asarray(idx, dtype=np.int64)]
+        dd = np.sqrt(np.maximum(np.asarray(vals, np.float32), 0.0))
+        return gids, dd, WorkStats(candidates_verified=B * len(self),
+                                   point_distance_computations=B * len(self))

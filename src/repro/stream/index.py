@@ -1,0 +1,265 @@
+"""StreamingIndex — the mutable LSM-style index behind the facade.
+
+Layout (DESIGN.md §7):
+
+    inserts → delta buffer ──flush──▶ sealed segment (static backend)
+    deletes → dropped from delta, or tombstoned against a segment
+    search  → fan-out over segments + delta, one top-k merge
+              (repro.kernels topk), tombstones filtered at merge time
+    compaction → when segments pile up or rot, the smallest are
+              rebuilt — live rows only — into one larger segment
+
+Id discipline: every inserted row gets a monotonically increasing
+GLOBAL id (its row in the append-only vector store).  Ids are never
+recycled, so payload stores indexed by id (kNN-LM values) stay valid
+across flushes and compactions.  Exactly one source — the delta or one
+segment — owns a live id at any time, so the merge never sees
+duplicates.
+
+Registered as backend ``"streaming"`` with capabilities
+``("ann", "stream")``; build it over (possibly empty) seed data via the
+ordinary facade call and mutate from there:
+
+    index = build_index(data, IndexConfig(backend="streaming"))
+    ids = index.insert(new_rows)        # visible to search immediately
+    index.delete(ids[:2])               # never returned again
+    index.flush()                       # seal the delta eagerly
+
+options: ``delta_threshold`` (flush trigger, default 512),
+``segment_backend`` (default "pmtree"), ``max_segments`` (compaction
+trigger, default 4), ``max_dead_fraction`` (segment rot trigger,
+default 0.5), ``use_kernels`` (delta-scan dispatch, default True).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.index.backends import BaseIndex
+from repro.index.registry import register_backend
+from repro.index.types import SearchResult, WorkStats
+
+from .delta import DeltaBuffer
+from .segment import Segment
+
+__all__ = ["StreamingIndex"]
+
+
+@register_backend("streaming", capabilities=("ann", "stream"))
+class StreamingIndex(BaseIndex):
+    """Mutable Index: static-backend segments + delta + tombstones."""
+
+    # -- construction ----------------------------------------------------
+
+    def _build(self) -> None:
+        opts = self.config.options
+        self.delta_threshold = int(opts.get("delta_threshold", 512))
+        self.segment_backend = str(opts.get("segment_backend", "pmtree"))
+        self.max_segments = int(opts.get("max_segments", 4))
+        self.max_dead_fraction = float(opts.get("max_dead_fraction", 0.5))
+        self._force = None if opts.get("use_kernels", True) else "ref"
+        if self.delta_threshold < 1:
+            raise ValueError("delta_threshold must be >= 1")
+        if self.max_segments < 2:
+            raise ValueError("max_segments must be >= 2")
+
+        self._store = np.empty((0, self.d), dtype=np.float32)
+        self._alive = np.empty((0,), dtype=bool)
+        self._owner = np.empty((0,), dtype=np.int64)  # -1 delta, else serial
+        self._total = 0  # ids ever assigned == rows used in the store
+        self._n_live = 0
+        self.delta = DeltaBuffer(self.d)
+        self.segments: list[Segment] = []
+        self._by_serial: dict[int, Segment] = {}
+        self.n_flushes = 0
+        self.n_compactions = 0
+        if self.data.shape[0]:
+            self.insert(self.data)
+        # the append-only store owns the rows now; keeping BaseIndex's
+        # seed array would double memory and expose a stale snapshot
+        self.data = self._store[:0]
+
+    # BaseIndex assigns ``self.n = data.shape[0]`` at build; for a
+    # mutable index n is the LIVE count, so shadow it with a property.
+    @property
+    def n(self) -> int:  # type: ignore[override]
+        return self._n_live
+
+    @n.setter
+    def n(self, _value) -> None:
+        pass
+
+    # -- mutation --------------------------------------------------------
+
+    def insert(self, points) -> np.ndarray:
+        """Append rows; returns their new global ids (int64, (n,)).
+        Inserted points are visible to ``search`` immediately (delta
+        scan); the delta is flushed once it reaches ``delta_threshold``.
+        """
+        x = np.atleast_2d(np.asarray(points, dtype=np.float32))
+        if x.shape[-1] != self.d:
+            raise ValueError(f"points have d={x.shape[-1]}, index d={self.d}")
+        cnt = x.shape[0]
+        if cnt == 0:
+            return np.empty((0,), dtype=np.int64)
+        ids = np.arange(self._total, self._total + cnt, dtype=np.int64)
+        self._grow_to(self._total + cnt)
+        self._store[ids] = x
+        self._alive[ids] = True
+        self._owner[ids] = -1
+        self._total += cnt
+        self._n_live += cnt
+        self.delta.insert(ids, x)
+        if len(self.delta) >= self.delta_threshold:
+            self.flush()
+        return ids
+
+    def delete(self, ids) -> int:
+        """Tombstone ids; returns how many were live.  Ids still in the
+        delta are dropped physically; sealed ids are filtered at merge
+        time until compaction rebuilds their segment.  Unknown (never
+        assigned) ids raise KeyError; re-deleting is a no-op.
+        """
+        ids = np.unique(np.asarray(ids, dtype=np.int64).reshape(-1))
+        if ids.size and (ids[0] < 0 or ids[-1] >= self._total):
+            bad = ids[(ids < 0) | (ids >= self._total)]
+            raise KeyError(f"unknown ids {bad.tolist()} "
+                           f"(assigned range is [0, {self._total}))")
+        targets = ids[self._alive[ids]]
+        if targets.size == 0:
+            return 0
+        self._alive[targets] = False
+        self._n_live -= int(targets.size)
+        in_delta = self.delta.delete(targets)
+        sealed = np.setdiff1d(targets, in_delta, assume_unique=True)
+        for serial in self._owner[sealed]:
+            self._by_serial[int(serial)].dead += 1
+        self._maybe_compact()
+        return int(targets.size)
+
+    def flush(self) -> None:
+        """Seal the delta into an immutable segment (no-op when empty)."""
+        if len(self.delta) == 0:
+            return
+        # build the segment BEFORE draining so a failed build (bad
+        # segment_backend, ...) leaves every live row still served
+        seg = Segment(self.delta.ids, self.delta.vectors, self.config,
+                      self.segment_backend)
+        ids, _ = self.delta.take()
+        self._owner[ids] = seg.serial
+        self._by_serial[seg.serial] = seg
+        self.segments.append(seg)
+        self.n_flushes += 1
+        self._maybe_compact()
+
+    # -- compaction ------------------------------------------------------
+
+    def _maybe_compact(self) -> None:
+        victims = {s.serial: s for s in self.segments
+                   if s.dead_fraction > self.max_dead_fraction}
+        if len(self.segments) >= self.max_segments:
+            # fold the smallest runs into one, leaving the big ones be:
+            # post-compaction count settles at max_segments - 1
+            by_live = sorted(self.segments, key=lambda s: (s.live, s.serial))
+            n_merge = len(self.segments) - self.max_segments + 2
+            for s in by_live[:n_merge]:
+                victims[s.serial] = s
+        if victims:
+            self._compact(list(victims.values()))
+
+    def _compact(self, victims: list[Segment]) -> None:
+        """Rebuild ``victims`` into one segment holding only live rows."""
+        live = np.concatenate([s.ids[self._alive[s.ids]] for s in victims])
+        live.sort()
+        # build the replacement BEFORE dropping the victims: a failed
+        # build must leave every live row still owned by a source
+        seg = (Segment(live, self._store[live], self.config,
+                       self.segment_backend) if live.size else None)
+        gone = {s.serial for s in victims}
+        self.segments = [s for s in self.segments if s.serial not in gone]
+        for serial in gone:
+            del self._by_serial[serial]
+        if seg is not None:
+            self._owner[live] = seg.serial
+            self._by_serial[seg.serial] = seg
+            self.segments.append(seg)
+        self.n_compactions += 1
+
+    # -- search ----------------------------------------------------------
+
+    def _search(self, q: np.ndarray, k: int) -> SearchResult:
+        B = q.shape[0]
+        stats = WorkStats()
+        id_blocks, dist_blocks = [], []
+        for seg in self.segments:
+            # widen by the segment's tombstone count so filtering dead
+            # rows at merge time cannot starve the per-segment top-k
+            gids, dd, st = seg.search(q, k + seg.dead)
+            id_blocks.append(gids)
+            dist_blocks.append(dd)
+            stats += st
+        gids, dd, st = self.delta.search(q, k, force=self._force)
+        id_blocks.append(gids)
+        dist_blocks.append(dd)
+        stats += st
+
+        gids = np.concatenate(id_blocks, axis=1)  # (B, S) int64
+        dd = np.concatenate(dist_blocks, axis=1).astype(np.float32)
+        if k == 0 or gids.shape[1] == 0:
+            return SearchResult(np.empty((B, 0), np.int32),
+                                np.empty((B, 0), np.float32), stats=stats)
+
+        # tombstones (and per-source -1 padding) applied at merge time
+        invalid = (gids < 0) | ~self._alive[np.maximum(gids, 0)]
+        dd = np.where(invalid, np.inf, dd)
+
+        from repro.kernels import ops
+
+        kk = min(k, gids.shape[1])
+        vals, cols = ops.topk_smallest(dd, kk, force=self._force)
+        vals = np.asarray(vals, np.float32)
+        cols = np.asarray(cols, np.int64)
+        merged = np.take_along_axis(gids, cols, axis=1)
+        merged = np.where(np.isinf(vals), -1, merged)
+        return SearchResult(merged.astype(np.int32), vals, stats=stats)
+
+    # -- introspection ---------------------------------------------------
+
+    @property
+    def segment_count(self) -> int:
+        return len(self.segments)
+
+    @property
+    def delta_size(self) -> int:
+        return len(self.delta)
+
+    @property
+    def total_assigned(self) -> int:
+        """Ids ever assigned (monotone; tombstones included)."""
+        return self._total
+
+    def live_ids(self) -> np.ndarray:
+        """Global ids currently alive (ascending, int64)."""
+        return np.flatnonzero(self._alive[: self._total]).astype(np.int64)
+
+    def get_vectors(self, ids) -> np.ndarray:
+        """Rows of the append-only store for ``ids`` (alive or not)."""
+        return self._store[np.asarray(ids, dtype=np.int64)].copy()
+
+    def _grow_to(self, need: int) -> None:
+        cap = self._store.shape[0]
+        if need <= cap:
+            return
+        new = max(need, cap * 2, 1024)
+        store = np.empty((new, self.d), dtype=np.float32)
+        store[:cap] = self._store[:cap]
+        alive = np.zeros((new,), dtype=bool)
+        alive[:cap] = self._alive
+        owner = np.full((new,), -1, dtype=np.int64)
+        owner[:cap] = self._owner
+        self._store, self._alive, self._owner = store, alive, owner
+
+    def __repr__(self) -> str:
+        return (f"StreamingIndex(n={self.n}, d={self.d}, "
+                f"segments={self.segment_count}, delta={self.delta_size}, "
+                f"flushes={self.n_flushes}, "
+                f"compactions={self.n_compactions})")

@@ -1,0 +1,77 @@
+"""Sealed immutable segments: the LSM runs of the streaming index.
+
+A segment is a frozen set of (global id, vector) rows served by ANY
+registered static backend — pmtree by default, so sealed data gets the
+paper-faithful probing path and its work counters for free.  The
+backend sees local row numbers 0..n-1; the segment owns the local→global
+id remap.  Deletes never touch a segment: the owner tracks a tombstone
+count (``dead``) per segment and compaction rebuilds when it grows.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.index.config import IndexConfig
+from repro.index.types import SearchResult, WorkStats
+
+__all__ = ["Segment"]
+
+# stream-orchestration knobs that must not leak into the static
+# backend's option namespace when a segment is built
+_STREAM_OPTIONS = ("segment_backend", "delta_threshold", "max_segments",
+                   "max_dead_fraction")
+
+
+def segment_config(config: IndexConfig, backend: str) -> IndexConfig:
+    opts = {k: v for k, v in config.options.items()
+            if k not in _STREAM_OPTIONS}
+    return config.replace(backend=backend, options=opts)
+
+
+class Segment:
+    """One immutable run: global ids + a static backend over the rows."""
+
+    _serial = 0  # process-wide serial — owner keys segments by it
+
+    def __init__(self, ids: np.ndarray, vectors: np.ndarray,
+                 config: IndexConfig, backend: str = "pmtree"):
+        from repro.index.registry import build_index
+
+        self.ids = np.asarray(ids, dtype=np.int64).reshape(-1)
+        if self.ids.size != vectors.shape[0]:
+            raise ValueError(
+                f"{self.ids.size} ids for {vectors.shape[0]} vectors")
+        self.backend = backend
+        self.index = build_index(vectors, segment_config(config, backend))
+        self.dead = 0  # tombstones attributed to this segment
+        Segment._serial += 1
+        self.serial = Segment._serial
+
+    @property
+    def size(self) -> int:
+        return self.ids.size
+
+    @property
+    def live(self) -> int:
+        return self.ids.size - self.dead
+
+    @property
+    def dead_fraction(self) -> float:
+        return self.dead / max(self.ids.size, 1)
+
+    def search(self, q: np.ndarray, k: int
+               ) -> tuple[np.ndarray, np.ndarray, WorkStats]:
+        """Top-k within the segment in GLOBAL id space.
+
+        Asks the backend for min(size, k) rows; the owner widens k by
+        ``dead`` so tombstone filtering at merge time cannot starve the
+        answer.
+        """
+        res: SearchResult = self.index.search(q, min(int(k), self.size))
+        local = np.asarray(res.indices, dtype=np.int64)
+        gids = np.where(local >= 0, self.ids[np.maximum(local, 0)], -1)
+        return gids, res.distances, res.stats
+
+    def __repr__(self) -> str:
+        return (f"Segment(serial={self.serial}, backend={self.backend!r}, "
+                f"size={self.size}, dead={self.dead})")

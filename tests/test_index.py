@@ -13,6 +13,7 @@ from repro.index import (
     available_backends,
     backend_capabilities,
     build_index,
+    pack_batch,
 )
 
 K = 10
@@ -197,6 +198,69 @@ class TestDtypeNormalization:
         assert fi.params is not None and fi.params.c == 1.5
 
 
+class TestPackBatch:
+    """Satellite: the padding helper's edge cases."""
+
+    def test_empty_row_pads_fully(self):
+        idx, dd = pack_batch([([], []), ([3], [1.5])], k=3)
+        assert idx.shape == dd.shape == (2, 3)
+        assert idx[0].tolist() == [-1, -1, -1]
+        assert np.isinf(dd[0]).all()
+        assert idx[1].tolist() == [3, -1, -1]
+        assert dd[1, 0] == np.float32(1.5) and np.isinf(dd[1, 1:]).all()
+
+    def test_no_rows(self):
+        idx, dd = pack_batch([], k=4)
+        assert idx.shape == dd.shape == (0, 4)
+        assert idx.dtype == np.int32 and dd.dtype == np.float32
+
+    def test_rows_longer_than_k_truncate(self):
+        idx, dd = pack_batch([([1, 2, 3, 4, 5], [0.1, 0.2, 0.3, 0.4, 0.5])],
+                             k=2)
+        assert idx[0].tolist() == [1, 2]
+        np.testing.assert_allclose(dd[0], [0.1, 0.2], rtol=1e-6)
+
+    def test_float_ids_cast_to_int32(self):
+        idx, dd = pack_batch([(np.array([7.0, 9.0]), np.array([1, 2]))], k=3)
+        assert idx.dtype == np.int32
+        assert idx[0].tolist() == [7, 9, -1]
+        assert dd.dtype == np.float32
+
+    def test_1d_and_2d_inputs_flatten(self):
+        idx, _ = pack_batch([(np.array([[1], [2]]), np.array([0.5, 0.6]))],
+                            k=2)
+        assert idx[0].tolist() == [1, 2]
+
+
+class TestWorkStatsArithmetic:
+    """Satellite: __add__ and the derived total."""
+
+    def test_add_is_fieldwise(self):
+        a = WorkStats(rounds=1, candidates_verified=2,
+                      node_distance_computations=3,
+                      point_distance_computations=4)
+        b = WorkStats(rounds=10, candidates_verified=20,
+                      node_distance_computations=30,
+                      point_distance_computations=40)
+        s = a + b
+        assert (s.rounds, s.candidates_verified,
+                s.node_distance_computations,
+                s.point_distance_computations) == (11, 22, 33, 44)
+        # operands untouched
+        assert a.rounds == 1 and b.rounds == 10
+
+    def test_add_identity(self):
+        a = WorkStats(rounds=5, candidates_verified=7)
+        assert (a + WorkStats()) == a
+
+    def test_total_distance_computations(self):
+        s = WorkStats(rounds=99, candidates_verified=2,
+                      node_distance_computations=3,
+                      point_distance_computations=5)
+        assert s.total_distance_computations == 10  # rounds excluded
+        assert WorkStats().total_distance_computations == 0
+
+
 class TestConfig:
     def test_default_k(self, dataset):
         index = build_index(dataset[:200],
@@ -212,3 +276,25 @@ class TestConfig:
     def test_build_index_overrides(self, dataset):
         index = build_index(dataset[:200], backend="lscan")
         assert index.backend_name == "lscan"
+
+    def test_config_is_hashable_cache_key(self):
+        """Satellite: frozen options make configs usable as sweep keys."""
+        a = IndexConfig(backend="pmtree", options={"s": 3})
+        b = IndexConfig(backend="pmtree", options={"s": 3})
+        c = a.with_options(s=5)
+        table = {a: "a", c: "c"}
+        assert table[b] == "a"  # equal configs hash alike
+        assert hash(a) == hash(b) and a == b and a != c
+
+    def test_options_do_not_alias_caller_dict(self):
+        opts = {"s": 3}
+        cfg = IndexConfig(options=opts)
+        opts["s"] = 99
+        assert cfg.options["s"] == 3
+        with pytest.raises(TypeError):
+            cfg.options["s"] = 99  # Mapping, not MutableMapping
+
+    def test_with_options_merges_and_stays_frozen(self):
+        cfg = IndexConfig(options={"a": 1}).with_options(b=2)
+        assert dict(cfg.options) == {"a": 1, "b": 2}
+        assert hash(cfg) is not None

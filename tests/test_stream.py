@@ -1,0 +1,321 @@
+"""The repro.stream subsystem: LSM lifecycle (delta → segments →
+compaction), tombstone semantics, and the acceptance bar — after
+interleaved inserts/deletes/compactions, StreamingIndex.search matches
+a FRESH static pmtree index built on the surviving points."""
+import numpy as np
+import pytest
+
+from conftest import make_clustered
+from repro.index import (
+    IndexConfig,
+    MutableIndex,
+    SearchResult,
+    available_backends,
+    backend_capabilities,
+    build_index,
+    register_backend,
+)
+
+K = 10
+EPS = 0.1  # recall-parity slack vs a fresh static pmtree
+D = 32
+
+STREAM_OPTS = {"delta_threshold": 128, "max_segments": 3,
+               "max_dead_fraction": 0.5}
+
+
+def stream_cfg(**opts):
+    return IndexConfig(backend="streaming", c=1.5, m=15, seed=0,
+                       options={**STREAM_OPTS, **opts})
+
+
+@pytest.fixture(scope="module")
+def churned():
+    """Interleaved insert/delete workload with enough churn to force
+    multiple flushes AND compactions.  Returns (index, deleted ids)."""
+    data = make_clustered(1400, D, n_clusters=20, seed=0)
+    index = build_index(data[:500], stream_cfg())
+    rng = np.random.default_rng(7)
+    deleted = []
+    pos = 500
+    while pos < len(data):
+        chunk = data[pos: pos + 137]
+        index.insert(chunk)
+        pos += len(chunk)
+        live = index.live_ids()
+        kill = rng.choice(live, 15, replace=False)
+        index.delete(kill)
+        deleted.extend(int(i) for i in kill)
+    assert index.n_flushes >= 3, "workload must force flushes"
+    assert index.n_compactions >= 1, "workload must force compactions"
+    assert len(index.segments) >= 1 and len(index.delta) > 0
+    return index, set(deleted)
+
+
+@pytest.fixture(scope="module")
+def survivors(churned):
+    index, _ = churned
+    ids = index.live_ids()
+    return ids, index.get_vectors(ids)
+
+
+@pytest.fixture(scope="module")
+def queries(survivors):
+    _, vectors = survivors
+    rng = np.random.default_rng(1)
+    return vectors[rng.integers(0, len(vectors), 7)] + 0.05
+
+
+@pytest.fixture(scope="module")
+def exact_global(survivors, queries):
+    ids, vectors = survivors
+    d = np.linalg.norm(vectors[None] - queries[:, None], axis=-1)
+    return ids[np.argsort(d, axis=1)[:, :K]]
+
+
+class TestAcceptance:
+    """The ISSUE acceptance bar."""
+
+    def test_recall_parity_with_fresh_static_pmtree(
+            self, churned, survivors, queries, exact_global):
+        index, _ = churned
+        ids, vectors = survivors
+        fresh = build_index(vectors, IndexConfig(backend="pmtree", c=1.5,
+                                                 m=15, seed=0))
+
+        def recall(result_ids, to_global=None):
+            recs = []
+            for row, ex in zip(result_ids, exact_global):
+                row = row[row >= 0]
+                got = ids[row] if to_global else row
+                recs.append(len(set(got.tolist()) & set(ex.tolist())) / K)
+            return float(np.mean(recs))
+
+        ref = recall(fresh.search(queries, K).indices, to_global=True)
+        assert ref >= 0.6  # the reference itself must be sane
+        stream = recall(index.search(queries, K).indices)
+        assert stream >= ref - EPS, f"stream {stream} vs fresh pmtree {ref}"
+
+    @pytest.mark.parametrize("batch", [1, 7])
+    def test_backend_parity_shapes_dtypes(self, churned, survivors, queries,
+                                          batch):
+        index, _ = churned
+        _, vectors = survivors
+        fresh = build_index(vectors, IndexConfig(backend="pmtree", seed=0))
+        shapes = {}
+        for name, idx in (("streaming", index), ("pmtree", fresh)):
+            res = idx.search(queries[:batch], K)
+            assert isinstance(res, SearchResult)
+            assert res.indices.dtype == np.int32, name
+            assert res.distances.dtype == np.float32, name
+            shapes[name] = (res.indices.shape, res.distances.shape)
+        assert set(shapes.values()) == {((batch, K), (batch, K))}
+
+    @pytest.mark.parametrize("batch", [1, 7])
+    def test_tombstoned_ids_never_returned(self, churned, queries, batch):
+        index, deleted = churned
+        live = set(index.live_ids().tolist())
+        res = index.search(queries[:batch], 50)
+        for i in res.indices[res.indices >= 0].ravel():
+            assert int(i) not in deleted, f"tombstoned id {i} returned"
+            assert int(i) in live
+
+    def test_distances_are_true_distances(self, churned, queries):
+        index, _ = churned
+        res = index.search(queries[:3], 5)
+        for b in range(3):
+            for i, d in zip(res.indices[b], res.distances[b]):
+                if i < 0:
+                    continue
+                true = np.linalg.norm(index.get_vectors([i])[0] - queries[b])
+                assert d == pytest.approx(true, rel=1e-4, abs=1e-4)
+
+
+class TestMutation:
+    @pytest.fixture()
+    def small(self):
+        return build_index(make_clustered(300, D, seed=2), stream_cfg())
+
+    def test_protocol(self, small):
+        assert isinstance(small, MutableIndex)
+        assert small.n == 300 and small.d == D
+
+    def test_insert_returns_monotone_global_ids(self, small):
+        a = small.insert(np.zeros((3, D), np.float32))
+        b = small.insert(np.zeros((2, D), np.float32))
+        assert a.tolist() == [300, 301, 302]
+        assert b.tolist() == [303, 304]
+        assert small.n == 305
+
+    def test_insert_visible_before_flush(self, small):
+        probe = np.full((1, D), 23.0, np.float32)
+        new = small.insert(probe)
+        assert small.delta_size > 0  # still buffered
+        res = small.search(probe, 1)
+        assert res.indices[0, 0] == new[0]
+
+    def test_delete_in_delta_is_physical(self, small):
+        new = small.insert(np.full((2, D), 31.0, np.float32))
+        before = small.delta_size
+        assert small.delete(new) == 2
+        assert small.delta_size == before - 2
+        assert small.n == 300
+
+    def test_delete_sealed_is_tombstone(self, small):
+        probe = np.full((1, D), 29.0, np.float32)
+        rows = probe + np.linspace(0, 0.01, 8)[:, None].astype(np.float32)
+        new = small.insert(rows)  # 8 rows: one delete stays sub-threshold
+        small.flush()
+        assert small.delta_size == 0
+        assert small.delete(new[:1]) == 1
+        assert sum(s.dead for s in small.segments) >= 1
+        assert new[0] not in small.search(probe, 5).indices
+
+    def test_flush_seals_and_is_idempotent(self, small):
+        small.insert(np.ones((4, D), np.float32))
+        segs = small.segment_count
+        small.flush()
+        assert small.delta_size == 0
+        assert small.segment_count == segs + 1
+        small.flush()  # no-op on empty delta
+        assert small.segment_count == segs + 1
+
+    def test_double_delete_is_noop(self, small):
+        new = small.insert(np.ones((1, D), np.float32))
+        assert small.delete(new) == 1
+        assert small.delete(new) == 0
+
+    def test_unknown_id_raises(self, small):
+        with pytest.raises(KeyError, match="unknown ids"):
+            small.delete([10 ** 9])
+        with pytest.raises(KeyError, match="unknown ids"):
+            small.delete([-1])
+
+    def test_dimension_guard(self, small):
+        with pytest.raises(ValueError, match="points have d"):
+            small.insert(np.zeros((2, D + 1), np.float32))
+
+
+class TestLifecycle:
+    def test_count_triggered_compaction_bounds_segments(self):
+        index = build_index(np.empty((0, 8), np.float32),
+                            stream_cfg(delta_threshold=32, max_segments=3))
+        rng = np.random.default_rng(0)
+        for _ in range(12):
+            index.insert(rng.normal(size=(32, 8)).astype(np.float32))
+        assert index.n_compactions >= 1
+        assert index.segment_count <= 3
+        assert index.n == 12 * 32
+
+    def test_rot_triggered_compaction_drops_tombstones(self):
+        rng = np.random.default_rng(0)
+        index = build_index(rng.normal(size=(200, 8)).astype(np.float32),
+                            stream_cfg(delta_threshold=64))
+        index.flush()
+        assert index.segment_count == 1
+        # kill > max_dead_fraction of the sealed segment → rebuild
+        index.delete(np.arange(150))
+        assert index.n_compactions >= 1
+        assert sum(s.dead for s in index.segments) == 0
+        assert sum(s.size for s in index.segments) == index.n == 50
+
+    def test_empty_build_then_grow(self):
+        index = build_index(np.empty((0, 8), np.float32), stream_cfg())
+        assert index.n == 0
+        res = index.search(np.zeros((2, 8), np.float32), 4)
+        assert res.indices.shape == (2, 4)
+        assert (res.indices == -1).all() and np.isinf(res.distances).all()
+        index.insert(np.ones((3, 8), np.float32))
+        res = index.search(np.ones((1, 8), np.float32), 2)
+        assert (res.indices[0] >= 0).all()
+
+    def test_k_larger_than_live_pads(self):
+        index = build_index(np.eye(4, dtype=np.float32), stream_cfg())
+        index.delete([0])
+        res = index.search(np.zeros((1, 4), np.float32), 5)
+        assert res.indices.shape == (1, 5)
+        assert (res.indices[0, :3] >= 0).all()
+        assert (res.indices[0, 3:] == -1).all()
+        assert np.isinf(res.distances[0, 3:]).all()
+
+    def test_failed_seal_leaves_every_row_served(self):
+        # 50 rows < delta_threshold: build succeeds, rows stay buffered
+        data = make_clustered(50, D, seed=6)
+        index = build_index(data, stream_cfg(segment_backend="no_such"))
+        with pytest.raises(KeyError, match="unknown index backend"):
+            index.flush()
+        # the failed seal must not orphan rows: still live, still found
+        assert index.n == 50 and index.delta_size == 50
+        res = index.search(data[:2] + 0.001, 1)
+        assert (res.indices[:, 0] == [0, 1]).all()
+
+    def test_segment_backend_option(self):
+        data = make_clustered(300, D, seed=3)
+        index = build_index(data, stream_cfg(segment_backend="flat",
+                                             use_kernels=False))
+        assert all(s.backend == "flat" for s in index.segments)
+        res = index.search(data[:2] + 0.01, 3)
+        assert (res.indices[:, 0] == [0, 1]).all()
+
+    def test_workstats_summed_across_sources(self):
+        data = make_clustered(400, D, seed=4)
+        index = build_index(data, stream_cfg())
+        index.insert(make_clustered(50, D, seed=5))  # stays in delta
+        assert index.segment_count >= 1 and index.delta_size == 50
+        res = index.search(data[:3] + 0.01, 5)
+        # the delta scan alone contributes B * |delta| verifications
+        assert res.stats.candidates_verified >= 3 * 50
+        assert res.stats.rounds >= 3
+
+
+class TestRegistry:
+    def test_streaming_registered_with_stream_capability(self):
+        assert "streaming" in available_backends()
+        assert available_backends("stream") == ["streaming"]
+        caps = backend_capabilities("streaming")
+        assert "ann" in caps and "stream" in caps and "cp" not in caps
+
+    def test_unknown_capability_rejected(self):
+        with pytest.raises(ValueError, match="unknown capabilities"):
+            register_backend("bogus", capabilities=("ann", "teleport"))
+
+    def test_cp_capability_guard(self):
+        index = build_index(np.eye(4, dtype=np.float32), stream_cfg())
+        with pytest.raises(NotImplementedError):
+            index.cp_search(2)
+
+
+class TestServing:
+    def test_retrieval_step_grows_online(self):
+        from repro.serve.serve_step import make_retrieval_step
+
+        rng = np.random.default_rng(0)
+        keys = rng.normal(size=(200, 16)).astype(np.float32)
+        values = np.arange(200)
+        step, index = make_retrieval_step(
+            keys, values, k=4,
+            index_config=stream_cfg(delta_threshold=64))
+
+        payload, valid, dists, res = step(keys[:3] + 0.001)
+        assert payload.shape == valid.shape == dists.shape == (3, 4)
+        assert valid.all()
+        assert (payload[:, 0] == [0, 1, 2]).all()
+
+        far = np.full((2, 16), 41.0, np.float32)
+        ids = step.extend(far, [900, 901])
+        payload, valid, _, _ = step(far[:1])
+        assert payload[0, 0] in (900, 901)
+        step.evict(ids)
+        payload, valid, _, _ = step(far[:1])
+        assert 900 not in payload[0][valid[0]]
+        assert 901 not in payload[0][valid[0]]
+
+    def test_validity_mask_guards_padding(self):
+        from repro.serve.serve_step import make_retrieval_step
+
+        keys = np.eye(3, dtype=np.float32)
+        step, _ = make_retrieval_step(keys, np.array([10, 11, 12]), k=5)
+        payload, valid, dists, res = step(keys[:1])
+        assert valid[0].sum() == 3  # only 3 rows exist
+        assert (res.indices[0][~valid[0]] == -1).all()
+        assert np.isinf(dists[0][~valid[0]]).all()
