@@ -5,6 +5,23 @@ import time
 
 import numpy as np
 
+#: summaries published by benchmark modules during run(); benchmarks.run
+#: drains this into the module's BENCH_<name>.json after each module
+_SUMMARIES: dict[str, dict] = {}
+
+
+def publish_summary(name: str, **fields) -> None:
+    """Record a machine-readable summary block for the current module's
+    BENCH_<module>.json (drained by benchmarks.run after run())."""
+    _SUMMARIES[name] = fields
+
+
+def take_summaries() -> dict[str, dict]:
+    """Drain and return every summary published since the last drain."""
+    out = dict(_SUMMARIES)
+    _SUMMARIES.clear()
+    return out
+
 
 def timer(fn, *args, repeats: int = 1, **kw):
     """Returns (result, seconds_per_call)."""
@@ -13,6 +30,24 @@ def timer(fn, *args, repeats: int = 1, **kw):
     for _ in range(repeats):
         out = fn(*args, **kw)
     return out, (time.perf_counter() - t0) / repeats
+
+
+def timer_samples(fn, *args, repeats: int = 10, **kw):
+    """Per-call wall times: returns (last result, [seconds] × repeats)."""
+    out, samples = None, []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        samples.append(time.perf_counter() - t0)
+    return out, samples
+
+
+def latency_quantiles_us(samples_s) -> dict[str, float]:
+    """{p50_us, p99_us, mean_us} from per-call seconds samples."""
+    s = np.asarray(samples_s, np.float64) * 1e6
+    return {"p50_us": float(np.percentile(s, 50)),
+            "p99_us": float(np.percentile(s, 99)),
+            "mean_us": float(np.mean(s))}
 
 
 def exact_knn(data: np.ndarray, q: np.ndarray, k: int):

@@ -1,0 +1,105 @@
+"""Quantization trade-off curve: recall vs compression vs latency.
+
+Sweeps the quantized flat configurations (DESIGN.md §8) against the
+float32 flat baseline on one synthetic clustered dataset: SQ8, PQ at
+several codebook counts, the registered ``flat-pq`` backend, and the
+codes-only (``store_raw=False``) operating point.  Reports, per
+variant: recall@10 (vs an exact scan), recall relative to float32
+flat, p50/p99 query-batch latency, and the two storage numbers —
+``bytes_per_point`` (codes + amortized codebooks; raw float32 for the
+baseline) and ``raw_bytes_per_point`` (full-precision rows kept for
+exact verify; 0 on codes-only variants).
+
+The acceptance trajectory this tracks: the PQ tiers must hold
+recall@10 ≥ 0.9× the float32 flat backend at ≤ 1/4 its stored
+bytes/point.  That gate is asserted at the end of ``run()`` itself —
+a regression fails the module (and the CI smoke) rather than silently
+shifting the curve.  Summary blocks land in BENCH_quant_tradeoff.json
+via ``benchmarks.run``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import (
+    csv_row,
+    latency_quantiles_us,
+    publish_summary,
+    recall_of,
+    timer_samples,
+)
+
+
+def run(quick: bool = True):
+    from repro.index import IndexConfig, build_index
+
+    rng = np.random.default_rng(0)
+    n, d = (4096, 256) if quick else (65536, 256)
+    B, k = 8, 10
+    repeats = 8 if quick else 20
+
+    centers = rng.normal(size=(32, d)).astype(np.float32) * 4
+    data = (centers[rng.integers(0, 32, n)]
+            + rng.normal(size=(n, d)).astype(np.float32) * 0.5)
+    queries = (data[rng.integers(0, n, B)]
+               + rng.normal(size=(B, d)).astype(np.float32) * 0.05)
+    exact = np.argsort(
+        np.linalg.norm(data[None] - queries[:, None], axis=-1), axis=1
+    )[:, :k]
+
+    base = IndexConfig(backend="flat", c=1.5, m=15, seed=0)
+    variants = [
+        ("flat_f32", base),
+        ("sq8", base.with_options(quant="sq8", rerank=128)),
+        ("pq16", base.with_options(quant="pq", rerank=128,
+                                   pq={"m_codebooks": 16})),
+        ("pq32", base.with_options(quant="pq", rerank=128,
+                                   pq={"m_codebooks": 32})),
+        ("flat-pq", base.replace(backend="flat-pq")),
+        ("pq32_codes_only", base.with_options(
+            quant="pq", rerank=128, store_raw=False,
+            pq={"m_codebooks": 32})),
+    ]
+
+    out, flat_recall, summaries = [], None, {}
+    for name, cfg in variants:
+        index = build_index(data, cfg)
+        index.search(queries, k)  # warm the jit cache before sampling
+        res, samples = timer_samples(index.search, queries, k,
+                                     repeats=repeats)
+        lat = latency_quantiles_us(np.asarray(samples) / B)
+        rec = float(np.mean([recall_of(row, ex)
+                             for row, ex in zip(res.indices, exact)]))
+        if flat_recall is None:
+            flat_recall = rec
+        bpp = float(index.bytes_per_point())
+        raw = float(index.raw_bytes_per_point())
+        summary = {
+            "recall_at_10": rec,
+            "recall_vs_flat": rec / max(flat_recall, 1e-12),
+            "bytes_per_point": bpp,
+            "raw_bytes_per_point": raw,
+            "compression_vs_f32": 4.0 * d / bpp,
+            "n": n, "d": d, "k": k, "batch": B,
+            **lat,
+        }
+        publish_summary(name, **summary)
+        summaries[name] = summary
+        out.append(csv_row(
+            f"quant_{name}", lat["mean_us"],
+            "recall=%.3f;vs_flat=%.3f;bytes_pt=%.1f;raw_pt=%.0f;"
+            "p50us=%.1f;p99us=%.1f"
+            % (rec, summary["recall_vs_flat"], bpp, raw,
+               lat["p50_us"], lat["p99_us"]),
+        ))
+
+    # acceptance gate: the PQ tiers hold ≥ 0.9× flat recall at ≤ 1/4
+    # the stored bytes/point — a violation fails the module
+    f32_bytes = summaries["flat_f32"]["bytes_per_point"]
+    for name in ("pq16", "pq32", "flat-pq"):
+        s = summaries[name]
+        assert s["recall_vs_flat"] >= 0.9, (
+            f"{name}: recall_vs_flat {s['recall_vs_flat']:.3f} < 0.9")
+        assert s["bytes_per_point"] <= f32_bytes / 4, (
+            f"{name}: {s['bytes_per_point']:.1f} B/pt > f32/4")
+    return out

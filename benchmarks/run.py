@@ -3,7 +3,11 @@
     PYTHONPATH=src python -m benchmarks.run [--full]
 
 Prints ``name,us_per_call,derived`` CSV rows (framework contract), one
-per measurement, grouped per paper artifact.
+per measurement, grouped per paper artifact, and writes one
+machine-readable ``BENCH_<name>.json`` per module (parsed rows + any
+summary blocks the module published via ``common.publish_summary``) so
+the perf trajectory — recall, p50/p99 latency, bytes/point — is
+diffable across PRs.
 
 Algorithm sweeps (table4_nn, table6_cp, fig8_param_study) go through
 the canonical entry point ``repro.index.build_index(data,
@@ -13,10 +17,13 @@ newly registered backend shows up in the tables automatically.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
 
+from .common import take_summaries
 
 MODULES = [
     ("fig3_estimator", "benchmarks.estimator_quality"),
@@ -28,7 +35,54 @@ MODULES = [
     ("figs7_14_16_gamma", "benchmarks.gamma_study"),
     ("kernel_micro", "benchmarks.kernel_micro"),
     ("stream_queries", "benchmarks.stream_queries"),
+    ("quant_tradeoff", "benchmarks.quant_tradeoff"),
 ]
+
+
+def _parse_derived(derived: str) -> dict:
+    """'recall=0.98;live=1200' → {'recall': 0.98, 'live': 1200.0};
+    non-numeric values stay strings."""
+    out = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        key, _, val = part.partition("=")
+        try:
+            out[key.strip()] = float(val)
+        except ValueError:
+            out[key.strip()] = val.strip()
+    return out
+
+
+def _parse_rows(rows: list[str]) -> list[dict]:
+    parsed = []
+    for r in rows:
+        name, _, rest = str(r).partition(",")
+        us, _, derived = rest.partition(",")
+        try:
+            entry = {"name": name, "us_per_call": float(us)}
+        except ValueError:
+            continue
+        entry.update(_parse_derived(derived))
+        parsed.append(entry)
+    return parsed
+
+
+def write_bench_json(key: str, rows: list[str], summaries: dict,
+                     elapsed_s: float, json_dir: str) -> str:
+    """Write BENCH_<key>.json; returns the path."""
+    os.makedirs(json_dir, exist_ok=True)
+    path = os.path.join(json_dir, f"BENCH_{key}.json")
+    payload = {
+        "module": key,
+        "elapsed_s": round(elapsed_s, 3),
+        "rows": _parse_rows(rows),
+        "summary": summaries,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def main() -> None:
@@ -36,12 +90,14 @@ def main() -> None:
         description="PM-LSH paper-artifact benchmarks.  Algorithm tables "
         "sweep every backend registered in repro.index — add an index "
         "via build_index(data, IndexConfig(backend=...)) and it appears "
-        "in the tables.",
+        "in the tables.  Each module also writes BENCH_<name>.json.",
     )
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow on CPU)")
     ap.add_argument("--only", default="",
                     help="comma-separated module keys to run")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for BENCH_<name>.json (default: cwd)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -51,12 +107,16 @@ def main() -> None:
         if only and key not in only:
             continue
         t0 = time.time()
+        take_summaries()  # drop anything stale from a failed module
         try:
             mod = __import__(modname, fromlist=["run"])
             rows = mod.run(quick=not args.full)
             for r in rows:
                 print(r, flush=True)
-            print(f"# {key}: ok in {time.time()-t0:.1f}s", flush=True)
+            elapsed = time.time() - t0
+            path = write_bench_json(key, list(rows), take_summaries(),
+                                    elapsed, args.json_dir)
+            print(f"# {key}: ok in {elapsed:.1f}s → {path}", flush=True)
         except Exception:
             failed.append(key)
             print(f"# {key}: FAILED\n# {traceback.format_exc()}",

@@ -7,7 +7,15 @@ indices / float32 distances, true original-space distances, WorkStats
 attached.  "stream"-capable backends additionally get a mutation
 conformance pass: insert→search visibility (before AND after flush),
 delete→absence (before and after compaction-inducing churn), and live
-count accounting.  Exits non-zero on the first violation.
+count accounting.
+
+A quant conformance gate then sweeps every quantized path (flat+sq8,
+flat+pq, flat-pq, codes-only, streaming with quantized segments):
+encode→search recall on the fixed seed must stay within a floor of the
+float32 flat backend, the SearchResult padding invariants (-1 indices
+/ +inf distances, int32/float32) must hold — exercised with k > n —
+and quantized storage must actually be smaller than float32.  Exits
+non-zero on the first violation.
 
     PYTHONPATH=src python scripts/check_api.py
 """
@@ -50,6 +58,83 @@ def check_stream(index, data, rng) -> None:
     for i in new:
         assert int(i) not in res.indices, f"tombstoned id {i} returned"
     assert index.delete(new) == 0  # re-delete is a no-op
+
+
+def _recall(res, exact_ids) -> float:
+    return float(np.mean([
+        len(set(row.tolist()) & set(ex.tolist())) / len(ex)
+        for row, ex in zip(res.indices, exact_ids)
+    ]))
+
+
+def _assert_result_invariants(res, n: int, B: int, k: int) -> None:
+    """The (B, k) dtype + padding contract, on any quantized path."""
+    assert res.indices.shape == res.distances.shape == (B, k)
+    assert res.indices.dtype == np.int32, res.indices.dtype
+    assert res.distances.dtype == np.float32, res.distances.dtype
+    valid = res.indices >= 0
+    assert valid.any(), "no results returned"
+    assert (res.indices[valid] < n).all(), "index out of range"
+    assert np.isfinite(res.distances[valid]).all()
+    assert (res.distances[~valid] == np.inf).all(), "padding must be +inf"
+    # distances ascend within each row's valid prefix
+    for b in range(B):
+        dv = res.distances[b][valid[b]]
+        assert (np.diff(dv) >= -1e-5).all(), "distances not sorted"
+
+
+def check_quant(data, queries, rng) -> None:
+    """Quant gate: recall within a floor of float32 flat + the padding
+    invariants + a real storage reduction, on every quantized path."""
+    from repro.index import IndexConfig, build_index
+
+    n = len(data)
+    B, k = queries.shape[0], 10
+    exact = np.argsort(
+        np.linalg.norm(data[None] - queries[:, None], axis=-1), axis=1
+    )[:, :k]
+    flat = build_index(data, IndexConfig(backend="flat", seed=0))
+    ref_recall = _recall(flat.search(queries, k), exact)
+    f32_bytes = flat.bytes_per_point()
+
+    paths = [
+        ("flat+sq8", IndexConfig(backend="flat", seed=0,
+                                 options={"quant": "sq8", "rerank": 64}),
+         0.05),
+        ("flat+pq", IndexConfig(backend="flat", seed=0,
+                                options={"quant": "pq", "rerank": 64,
+                                         "pq": {"m_codebooks": 8}}),
+         0.05),
+        ("flat-pq", IndexConfig(backend="flat-pq", seed=0), 0.05),
+        ("codes-only", IndexConfig(backend="flat", seed=0,
+                                   options={"quant": "sq8", "rerank": 64,
+                                            "store_raw": False}),
+         0.15),
+    ]
+    for name, cfg, floor in paths:
+        index = build_index(data, cfg)
+        res = index.search(queries, k)
+        _assert_result_invariants(res, n, B, k)
+        rec = _recall(res, exact)
+        assert rec >= ref_recall - floor, (
+            f"{name}: recall {rec:.3f} below flat {ref_recall:.3f} - {floor}")
+        assert index.bytes_per_point() < f32_bytes, (
+            f"{name}: no storage reduction")
+        # k > n exercises the padding path end-to-end
+        _assert_result_invariants(index.search(queries[:2], n + 7),
+                                  n, 2, n + 7)
+
+    # streaming with quantized sealed segments: the same mutation
+    # conformance every "stream" backend passes, over quantized storage
+    stream = build_index(
+        data, IndexConfig(backend="streaming", seed=0,
+                          options={"quant": "sq8", "delta_threshold": 64,
+                                   "max_segments": 3}))
+    assert stream.segments and all(
+        s.backend == "flat" for s in stream.segments)
+    check_stream(stream, data, rng)
+    print(f"  ok   quant gate    [recall floor vs flat={ref_recall:.3f}, "
+          f"padding, streaming-quant]")
 
 
 def main() -> int:
@@ -111,10 +196,17 @@ def main() -> int:
             failures.append(backend)
             print(f"  FAIL {backend:12s} {type(e).__name__}: {e}")
 
+    try:
+        check_quant(data, queries, rng)
+    except Exception as e:  # noqa: BLE001
+        failures.append("quant-gate")
+        print(f"  FAIL quant gate    {type(e).__name__}: {e}")
+
     if failures:
         print(f"check_api: FAILED for {failures}")
         return 1
-    print(f"check_api: all {len(available_backends())} backends conform")
+    print(f"check_api: all {len(available_backends())} backends conform "
+          "+ quant gate")
     return 0
 
 

@@ -14,10 +14,13 @@ study — behind one batched API:
     cp = build_index(data, IndexConfig(backend="pmtree")).cp_search(k=10)
 
 Backends register by name (``available_backends()`` lists them):
-pmtree, flat, sharded, streaming (the mutable LSM layer from
+pmtree, flat, flat-pq (quantized storage + ADC rerank from
+``repro.quant``), sharded, streaming (the mutable LSM layer from
 ``repro.stream`` — insert/delete/flush behind the same contract), plus
 the §7 baselines (multiprobe, qalsh, srs, rlsh, lscan, lsb_tree,
-acp_p, mkcp, nlj).  See DESIGN.md §4 and §7.
+acp_p, mkcp, nlj).  Quantization is also an option on the flat
+backend: ``IndexConfig(backend="flat", options={"quant": "sq8"|"pq",
+"rerank": 128})``.  See DESIGN.md §4, §7 and §8.
 """
 from .config import IndexConfig  # noqa: F401
 from .registry import (  # noqa: F401

@@ -104,6 +104,22 @@ class BaseIndex:
     def _cp_search(self, k: int) -> CpSearchResult:
         raise NotImplementedError
 
+    # -- storage accounting ----------------------------------------------
+
+    def bytes_per_point(self) -> float:
+        """Bytes/point of the index's DISTANCE storage — what the
+        search tiers read to score a point (raw float32 here; codes +
+        amortized codebooks for quantized backends).  The m-dim
+        projection (4m bytes, identical across variants) and any
+        retained raw rerank vectors are excluded — see
+        ``raw_bytes_per_point``."""
+        return 4.0 * self.d
+
+    def raw_bytes_per_point(self) -> float:
+        """Bytes/point of full-precision vectors kept for exact
+        verification (0 when a quantized backend dropped them)."""
+        return 4.0 * self.d
+
     def __repr__(self) -> str:
         return (f"{type(self).__name__}(backend={self.backend_name!r}, "
                 f"n={self.n}, d={self.d})")
@@ -161,23 +177,102 @@ class PMTreeBackend(BaseIndex):
 
 @register_backend("flat", capabilities=("ann",))
 class FlatBackend(BaseIndex):
-    """Device-native dense pipeline (DESIGN.md §3), jit'd and batched."""
+    """Device-native dense pipeline (DESIGN.md §3), jit'd and batched.
+
+    With ``options={"quant": "sq8"|"pq", ...}`` the verify tier goes
+    through quantized storage (DESIGN.md §8): a codec is trained at
+    build time, every point is encoded, and queries rerank the T
+    LSH-selected candidates by asymmetric (ADC) distance on the codes
+    before exact-verifying only the best ``rerank`` rows (default
+    adaptive: max(4k, T/3), floor 64 — ADC ordering noise grows with
+    the candidate pool, so a fixed budget starves recall at large n).
+    Codec hyper-parameters nest under the codec's name, e.g.
+    ``options={"quant": "pq", "pq": {"m_codebooks": 32}}``; with
+    ``store_raw=False`` the raw float vectors are dropped entirely and
+    answers come straight from ADC estimates.
+    """
 
     def _build(self) -> None:
+        import jax.numpy as jnp
+
         cfg = self.config
         self.impl = build_flat_index(self.data, m=cfg.m, seed=cfg.seed,
                                      c=cfg.c)
         self.use_kernels = bool(cfg.options.get("use_kernels", True))
+        self.codec = self.codes = None
+        rerank = cfg.options.get("rerank")
+        self.rerank = None if rerank is None else int(rerank)
+        self.store_raw = bool(cfg.options.get("store_raw", True))
+        qname = cfg.options.get("quant")
+        if qname is None:
+            return
+        from repro.quant import train_codec
+
+        copts = dict(cfg.options.get(qname) or {})
+        seed = copts.pop("seed", cfg.seed)  # codec-level seed wins
+        self.codec = train_codec(str(qname), self.data, seed=seed, **copts)
+        self.codes = jnp.asarray(self.codec.encode(self.data))
+        if not self.store_raw:
+            # codes ARE the point storage now: drop both float copies
+            import dataclasses as _dc
+
+            self.impl = _dc.replace(
+                self.impl, data=jnp.zeros((0, self.d), jnp.float32))
+            self.data = np.empty((0, self.d), dtype=np.float32)
 
     def _search(self, q: np.ndarray, k: int) -> SearchResult:
         T = candidate_budget(self.impl.params, self.n, k)
-        ids, dd = ann_query(self.impl, q, k=k, T=T,
-                            use_kernels=self.use_kernels)
+        B = q.shape[0]
+        if self.codec is None:
+            ids, dd = ann_query(self.impl, q, k=k, T=T,
+                                use_kernels=self.use_kernels)
+            return SearchResult(
+                np.asarray(ids), np.asarray(dd),
+                stats=WorkStats(rounds=B, candidates_verified=B * T),
+            )
+        from repro.quant import quant_ann_query
+
+        rerank = (self.rerank if self.rerank is not None
+                  else max(4 * k, T // 3, 64))
+        R = min(max(rerank, k), T)
+        ids, dd = quant_ann_query(
+            self.impl, self.codec, self.codes, q, k=k, T=T, R=R,
+            store_raw=self.store_raw,
+            force=None if self.use_kernels else "ref",
+        )
         return SearchResult(
             np.asarray(ids), np.asarray(dd),
-            stats=WorkStats(rounds=q.shape[0],
-                            candidates_verified=q.shape[0] * T),
+            stats=WorkStats(
+                rounds=B,
+                candidates_verified=B * R if self.store_raw else 0,
+                point_distance_computations=B * T,  # the ADC rerank tier
+            ),
         )
+
+    def bytes_per_point(self) -> float:
+        if self.codec is None:
+            return 4.0 * self.d
+        per_point = self.codec.bytes_per_point
+        codebook = getattr(self.codec, "codebook_bytes", 0)
+        return per_point + codebook / max(self.n, 1)
+
+    def raw_bytes_per_point(self) -> float:
+        if self.codec is not None and not self.store_raw:
+            return 0.0
+        return 4.0 * self.d
+
+
+@register_backend("flat-pq", capabilities=("ann", "quant"))
+class FlatPQBackend(FlatBackend):
+    """The flat pipeline with PQ codes + ADC rerank pre-wired: PQ is
+    trained at build time unless the config already names a codec, so
+    ``build_index(data, backend="flat-pq")`` is the one-liner for the
+    quantized tier (≈16× smaller point storage at default settings)."""
+
+    def _build(self) -> None:
+        if "quant" not in self.config.options:
+            self.config = self.config.with_options(quant="pq")
+        super()._build()
 
 
 @register_backend("sharded", capabilities=("ann", "cp"))

@@ -11,7 +11,9 @@ count, ``{"use_kernels": False}`` for the flat backend on CPU,
 ``options`` is normalized to an immutable ``FrozenOptions`` mapping at
 construction: the caller's dict is copied (no aliasing — mutating it
 later cannot change the config) and the config stays hashable, so it
-works as a cache / sweep key.
+works as a cache / sweep key.  Freezing is DEEP: nested mappings become
+``FrozenOptions`` and nested lists/sets become tuples, so structured
+options like ``{"pq": {"m_codebooks": 16}}`` hash too.
 """
 from __future__ import annotations
 
@@ -21,13 +23,25 @@ from typing import Any, Iterator, Mapping
 __all__ = ["IndexConfig", "FrozenOptions"]
 
 
+def _freeze(value: Any) -> Any:
+    """Recursively convert mappings/sequences to hashable equivalents."""
+    if isinstance(value, Mapping):
+        return FrozenOptions(value)
+    if isinstance(value, (list, tuple)):
+        return tuple(_freeze(v) for v in value)
+    if isinstance(value, (set, frozenset)):
+        return tuple(sorted(_freeze(v) for v in value))
+    return value
+
+
 class FrozenOptions(Mapping):
     """Immutable, hashable Mapping — the normal form of ``options``."""
 
     __slots__ = ("_items", "_hash")
 
     def __init__(self, items: Mapping[str, Any] | None = None):
-        object.__setattr__(self, "_items", dict(items or {}))
+        frozen = {k: _freeze(v) for k, v in dict(items or {}).items()}
+        object.__setattr__(self, "_items", frozen)
         object.__setattr__(self, "_hash", None)
 
     def __getitem__(self, key: str) -> Any:

@@ -33,8 +33,10 @@ _ORDER: list[str] = []  # registration order — the canonical sweep order
 
 #: the capability vocabulary sweeps and conformance gates filter on:
 #: "ann" — batched search(); "cp" — cp_search(); "stream" — mutable
-#: insert()/delete()/flush() on top of "ann"
-KNOWN_CAPABILITIES = frozenset({"ann", "cp", "stream"})
+#: insert()/delete()/flush() on top of "ann"; "quant" — quantized point
+#: storage with an ADC rerank tier (returned distances may be
+#: code-estimated rather than exact)
+KNOWN_CAPABILITIES = frozenset({"ann", "cp", "stream", "quant"})
 
 
 def register_backend(name: str, *, capabilities: Iterable[str] = ("ann",)):

@@ -28,9 +28,12 @@ class WorkStats:
     the batch.  Backends that cannot observe a counter report zero."""
 
     rounds: int = 0  # range-query / probing rounds issued
-    candidates_verified: int = 0  # original-space point distance comps
+    candidates_verified: int = 0  # EXACT original-space distance comps
     node_distance_computations: int = 0  # tree-node pruning distances
-    point_distance_computations: int = 0  # leaf-scan projected distances
+    # estimate-tier per-point distance comps: leaf-scan projected
+    # distances (pmtree), code-estimated ADC distances (quant rerank);
+    # candidates_verified stays the cross-backend-comparable exact count
+    point_distance_computations: int = 0
 
     def __add__(self, other: "WorkStats") -> "WorkStats":
         return WorkStats(

@@ -4,6 +4,8 @@ kernels:
   pairwise_dist — candidate VERIFICATION: exact d-dim distances (MXU)
   project_dist  — fused ESTIMATE: x@A then ||·-q'||², projection stays in VMEM
   topk          — streaming SELECT: running top-k across distance tiles
+  adc           — quantized RERANK: asymmetric distances over codes via
+                  per-query LUTs (one-hot MXU contraction)
 ops  — jit'd public wrappers (backend-aware dispatch)
 ref  — pure-jnp oracles (the semantics contract; tests sweep against these)
 """

@@ -16,11 +16,12 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .adc import adc_dist_pallas
 from .pairwise_dist import pairwise_sq_dist_pallas
 from .project_dist import project_dist_pallas
 from .topk import topk_smallest_pallas
 
-__all__ = ["pairwise_sq_dist", "project_dist", "topk_smallest"]
+__all__ = ["pairwise_sq_dist", "project_dist", "topk_smallest", "adc_dist"]
 
 
 def _mode(force: str | None) -> str:
@@ -45,6 +46,25 @@ def project_dist(x: jax.Array, a: jax.Array, qp: jax.Array, *,
     if mode == "ref":
         return ref.project_dist(x, a, qp)
     return project_dist_pallas(x, a, qp, interpret=(mode == "interpret"), **block_kw)
+
+
+def adc_dist(codes: jax.Array, lut: jax.Array, *, force: str | None = None,
+             **block_kw) -> jax.Array:
+    """Asymmetric distances: codes (N,S) or (B,N,S) × LUTs (B,S,V) → (B,N).
+
+    Per-query candidate codes (B, N, S) vmap the shared-codes kernel
+    over the batch; the ref oracle handles both shapes directly.
+    """
+    mode = _mode(force)
+    if mode == "ref":
+        return ref.adc_dist(codes, lut)
+    interpret = mode == "interpret"
+    if codes.ndim == 3:
+        return jax.vmap(
+            lambda c, l: adc_dist_pallas(c, l[None], interpret=interpret,
+                                         **block_kw)[0]
+        )(codes, lut)
+    return adc_dist_pallas(codes, lut, interpret=interpret, **block_kw)
 
 
 def topk_smallest(d: jax.Array, k: int, *, force: str | None = None,

@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["pairwise_sq_dist", "project_dist", "topk_smallest"]
+__all__ = ["pairwise_sq_dist", "project_dist", "topk_smallest", "adc_dist"]
 
 
 def pairwise_sq_dist(q: jax.Array, x: jax.Array) -> jax.Array:
@@ -34,6 +34,27 @@ def project_dist(x: jax.Array, a: jax.Array, qp: jax.Array) -> jax.Array:
     """
     proj = jnp.asarray(x, jnp.float32) @ jnp.asarray(a, jnp.float32)  # (N, m)
     return pairwise_sq_dist(qp, proj)
+
+
+def adc_dist(codes: jax.Array, lut: jax.Array) -> jax.Array:
+    """Asymmetric (query-float vs point-code) squared distances via LUTs.
+
+    codes: (N, S) integer codes shared across the batch, or (B, N, S)
+           per-query candidate codes; S code slots, values in [0, V).
+    lut:   (B, S, V) float32 per-query tables; lut[b, s, v] is the
+           squared-distance contribution of code value v in slot s.
+
+    Returns (B, N) float32: out[b, n] = Σ_s lut[b, s, codes[..., n, s]].
+    Both codecs in ``repro.quant`` reduce to this form — PQ with one
+    slot per sub-codebook, SQ8 with one slot per dimension.
+    """
+    codes = jnp.asarray(codes, jnp.int32)
+    lut = jnp.asarray(lut, jnp.float32)
+    if codes.ndim == 2:
+        codes = jnp.broadcast_to(codes[None], (lut.shape[0],) + codes.shape)
+    # lut (B, 1, S, V) gathered at codes (B, N, S, 1) along V
+    g = jnp.take_along_axis(lut[:, None, :, :], codes[..., None], axis=3)
+    return jnp.sum(g[..., 0], axis=-1)
 
 
 def topk_smallest(d: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:

@@ -1,0 +1,24 @@
+"""repro.quant — quantized point storage + asymmetric-distance search.
+
+The third estimator tier of the framework (DESIGN.md §8): points are
+stored as small integer codes (SQ8: 1 byte/dim; PQ: 1 byte/sub-codebook)
+and the query pipeline reranks LSH-selected candidates with asymmetric
+distances computed straight off the codes (``repro.kernels.adc``),
+touching full-precision vectors only for a final budget of R rows — or
+never, when the raw vectors are dropped (``store_raw=False``).
+
+Reached through the facade, not imported directly:
+
+    build_index(data, IndexConfig(backend="flat",
+                                  options={"quant": "pq", "rerank": 128}))
+    build_index(data, IndexConfig(backend="flat-pq"))   # same, pre-wired
+"""
+from .codec import (  # noqa: F401
+    Codec,
+    PQCodec,
+    SQ8Codec,
+    train_codec,
+    train_pq,
+    train_sq8,
+)
+from .search import quant_ann_query  # noqa: F401

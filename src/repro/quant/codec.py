@@ -1,0 +1,270 @@
+"""Quantization codecs: compressed point storage + ADC lookup tables.
+
+Both codecs speak one ``Codec`` protocol built around the ADC kernel's
+(codes, LUT) form (``repro.kernels.adc``): a point is S integer code
+slots with values in [0, V); a query becomes a (S, V) table of squared
+per-slot distance contributions; the asymmetric distance is the sum of
+S table entries.  Concretely:
+
+  SQ8 — scalar int8: one slot per DIMENSION, the 256 values an affine
+        grid over that dimension's [min, max] range.  4× compression,
+        near-exact distances, no training beyond a min/max pass.
+  PQ  — product quantization: one slot per SUB-CODEBOOK (d split into
+        ``m_codebooks`` contiguous subspaces), the values k-means
+        centroids trained at build time.  d/m_codebooks ×4 compression
+        (16-64× typical), accuracy tunable via codebook count.
+
+Codecs are frozen dataclasses registered as pytrees (arrays as leaves),
+so ``lookup_tables`` / ``encode`` / ``decode`` trace under jit and a
+codec can ride through a jit'd search pipeline as an argument.
+Training (``train_codec``) is host-side numpy at build time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Codec", "SQ8Codec", "PQCodec", "train_codec", "train_sq8",
+           "train_pq"]
+
+
+@runtime_checkable
+class Codec(Protocol):
+    """What the quantized tier needs from a codec."""
+
+    @property
+    def n_slots(self) -> int:  # S: code slots per point
+        ...
+
+    @property
+    def n_values(self) -> int:  # V: distinct values per slot
+        ...
+
+    @property
+    def bytes_per_point(self) -> float:
+        """Stored bytes per point: codes + amortized codec tables."""
+        ...
+
+    def encode(self, x) -> jax.Array:
+        """(N, d) float → (N, S) uint8 codes."""
+        ...
+
+    def decode(self, codes) -> jax.Array:
+        """(N, S) codes → (N, d) float32 reconstruction."""
+        ...
+
+    def lookup_tables(self, q) -> jax.Array:
+        """(B, d) float queries → (B, S, V) float32 ADC tables."""
+        ...
+
+
+# ---------------------------------------------------------------------------
+# SQ8 — per-dimension affine int8
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SQ8Codec:
+    """Scalar quantizer: dim j's code v decodes to offset[j]+v·scale[j]."""
+
+    scale: jax.Array  # (d,) float32, grid step per dimension (> 0)
+    offset: jax.Array  # (d,) float32, grid origin per dimension
+
+    V = 256
+
+    @property
+    def n_slots(self) -> int:
+        return self.scale.shape[0]
+
+    @property
+    def n_values(self) -> int:
+        return self.V
+
+    @property
+    def bytes_per_point(self) -> float:
+        return float(self.n_slots)  # 1 byte/dim; scale/offset are O(d) total
+
+    def encode(self, x) -> jax.Array:
+        x = jnp.asarray(x, jnp.float32)
+        v = jnp.round((x - self.offset[None, :]) / self.scale[None, :])
+        return jnp.clip(v, 0, self.V - 1).astype(jnp.uint8)
+
+    def decode(self, codes) -> jax.Array:
+        c = jnp.asarray(codes, jnp.float32)
+        return self.offset[None, :] + c * self.scale[None, :]
+
+    def lookup_tables(self, q) -> jax.Array:
+        q = jnp.asarray(q, jnp.float32)
+        grid = self.offset[:, None] + self.scale[:, None] * jnp.arange(
+            self.V, dtype=jnp.float32)  # (d, V) decoded values
+        return (q[:, :, None] - grid[None]) ** 2  # (B, d, V)
+
+    def adc_direct(self, q, codes) -> jax.Array:
+        """ADC without tables: SQ8 decoding is affine, so the asymmetric
+        distance is d multiply-adds per point — 256× cheaper than the
+        generic (S, V) LUT contraction, same values (the LUT form stays
+        as the oracle/tests surface).  q (B, d) × codes (B, T, d) →
+        (B, T) squared distances."""
+        q = jnp.asarray(q, jnp.float32)
+        dec = (self.offset[None, None, :]
+               + jnp.asarray(codes, jnp.float32) * self.scale[None, None, :])
+        return jnp.sum((dec - q[:, None, :]) ** 2, axis=-1)
+
+
+jax.tree_util.register_dataclass(
+    SQ8Codec, data_fields=["scale", "offset"], meta_fields=[])
+
+
+def train_sq8(x: np.ndarray, **_ignored) -> SQ8Codec:
+    """Fit the per-dimension [min, max] grid (one pass, no iterations)."""
+    x = np.asarray(x, np.float32)
+    lo, hi = x.min(axis=0), x.max(axis=0)
+    scale = np.maximum((hi - lo) / (SQ8Codec.V - 1), 1e-12).astype(np.float32)
+    return SQ8Codec(scale=jnp.asarray(scale), offset=jnp.asarray(lo))
+
+
+# ---------------------------------------------------------------------------
+# PQ — per-subspace k-means codebooks
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PQCodec:
+    """Product quantizer: slot s's code v decodes to centroids[s, v].
+
+    ``centroids`` operate on the zero-padded dimensionality S·ds ≥ d;
+    ``d`` (static metadata) trims the padding back off in decode.
+    """
+
+    centroids: jax.Array  # (S, V, ds) float32
+    d: int  # original dimensionality (≤ S·ds)
+
+    @property
+    def n_slots(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def n_values(self) -> int:
+        return self.centroids.shape[1]
+
+    @property
+    def sub_dim(self) -> int:
+        return self.centroids.shape[2]
+
+    @property
+    def bytes_per_point(self) -> float:
+        return float(self.n_slots)  # 1 byte/slot (V ≤ 256); codebooks O(1)
+
+    @property
+    def codebook_bytes(self) -> int:
+        return int(np.prod(self.centroids.shape)) * 4
+
+    def _split(self, x) -> jax.Array:
+        """(N, d) → (N, S, ds), zero-padding the trailing dims."""
+        x = jnp.asarray(x, jnp.float32)
+        dp = self.n_slots * self.sub_dim
+        x = jnp.pad(x, ((0, 0), (0, dp - x.shape[1])))
+        return x.reshape(x.shape[0], self.n_slots, self.sub_dim)
+
+    def encode(self, x) -> jax.Array:
+        sub = self._split(x)  # (N, S, ds)
+        # per-slot argmin over an (N, V) matrix via the dot expansion —
+        # never materializes the (N, S, V, ds) difference tensor, so
+        # encoding stays O(N·V) transient at any m_codebooks
+        cn = jnp.sum(self.centroids * self.centroids, axis=-1)  # (S, V)
+        codes = []
+        for s in range(self.n_slots):
+            d2 = cn[s][None, :] - 2.0 * (sub[:, s, :] @ self.centroids[s].T)
+            codes.append(jnp.argmin(d2, axis=-1))
+        return jnp.stack(codes, axis=1).astype(jnp.uint8)
+
+    def decode(self, codes) -> jax.Array:
+        codes = jnp.asarray(codes, jnp.int32)  # (N, S)
+        slots = jnp.arange(self.n_slots)[None, :]
+        sub = self.centroids[slots, codes]  # (N, S, ds)
+        return sub.reshape(codes.shape[0], -1)[:, : self.d]
+
+    def lookup_tables(self, q) -> jax.Array:
+        qsub = self._split(q)  # (B, S, ds)
+        return jnp.sum(
+            (qsub[:, :, None, :] - self.centroids[None]) ** 2, axis=-1
+        )  # (B, S, V)
+
+
+jax.tree_util.register_dataclass(
+    PQCodec, data_fields=["centroids"], meta_fields=["d"])
+
+
+def train_pq(
+    x: np.ndarray,
+    m_codebooks: int = 16,
+    n_values: int = 256,
+    iters: int = 10,
+    sample: int = 16384,
+    seed: int = 0,
+    **_ignored,
+) -> PQCodec:
+    """Per-subspace Lloyd k-means on (a sample of) the data.
+
+    d is zero-padded up to a multiple of ``m_codebooks``; V is clamped
+    to min(n_values, n/2, 256) — codes must fit uint8, and a codebook
+    with fewer than two training rows per centroid both overfits and
+    fails to amortize its own storage.  Empty clusters are reseeded
+    from the rows farthest from their centroid.
+    """
+    x = np.asarray(x, np.float32)
+    n, d = x.shape
+    S = max(1, min(int(m_codebooks), d))
+    V = max(1, min(int(n_values), n // 2, 256))
+    rng = np.random.default_rng(seed)
+    if n > sample:
+        x = x[rng.choice(n, sample, replace=False)]
+        n = sample
+    ds = -(-d // S)  # ceil
+    xp = np.zeros((n, S * ds), np.float32)
+    xp[:, :d] = x
+    sub = xp.reshape(n, S, ds)
+
+    cents = np.empty((S, V, ds), np.float32)
+    for s in range(S):
+        pts = sub[:, s, :]  # (n, ds)
+        c = pts[rng.choice(n, V, replace=(n < V))].copy()
+        for _ in range(max(1, iters)):
+            d2 = (
+                np.sum(pts * pts, axis=1, keepdims=True)
+                + np.sum(c * c, axis=1)[None, :]
+                - 2.0 * pts @ c.T
+            )  # (n, V)
+            assign = np.argmin(d2, axis=1)
+            counts = np.bincount(assign, minlength=V)
+            sums = np.zeros((V, ds), np.float32)
+            np.add.at(sums, assign, pts)
+            nonempty = counts > 0
+            c[nonempty] = sums[nonempty] / counts[nonempty, None]
+            empties = np.flatnonzero(~nonempty)
+            if empties.size:  # reseed from the worst-fit rows
+                worst = np.argsort(-d2[np.arange(n), assign])[: empties.size]
+                c[empties] = pts[worst]
+        cents[s] = c
+    return PQCodec(centroids=jnp.asarray(cents), d=d)
+
+
+# ---------------------------------------------------------------------------
+# factory
+# ---------------------------------------------------------------------------
+
+_TRAINERS = {"sq8": train_sq8, "pq": train_pq}
+
+
+def train_codec(name: str, x: np.ndarray, *, seed: int = 0, **opts) -> Codec:
+    """Train the codec registered under ``name`` ("sq8" | "pq") on x."""
+    try:
+        trainer = _TRAINERS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown codec {name!r}; known: {sorted(_TRAINERS)}") from None
+    return trainer(x, seed=seed, **opts)

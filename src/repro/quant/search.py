@@ -1,0 +1,95 @@
+"""The quantized three-tier query pipeline (DESIGN.md §8).
+
+Extends the flat pipeline's estimate → select → verify with an ADC
+rerank tier between select and verify:
+
+    1. estimate:  projected distances ||x@A - q'||²       (m-dim, χ²(m))
+    2. select:    top-(βn+k) projected-nearest             candidates C
+    3. rerank:    ADC distances on codes over C → top-R    (d-dim, quantized)
+    4. verify:    exact distances on the R float vectors   (or skip when
+                  the raw vectors were dropped: answer straight from ADC)
+
+Tier 3 reads S bytes/point instead of 4d, so the candidate budget T
+stays cheap to examine and only R ≪ T rows ever touch full-precision
+storage.  With ``store_raw=False`` tier 4 disappears entirely and the
+index holds no float vectors at all — returned distances are then the
+(slightly biased) ADC estimates.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flat_index import FlatIndex
+
+from .codec import Codec
+
+__all__ = ["quant_ann_query"]
+
+
+@partial(jax.jit, static_argnames=("k", "T", "R", "store_raw", "force"))
+def quant_ann_query(
+    index: FlatIndex,
+    codec: Codec,
+    codes: jax.Array,
+    q: jax.Array,
+    *,
+    k: int,
+    T: int,
+    R: int,
+    store_raw: bool = True,
+    force: str | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """(c,k)-ANN over quantized storage.
+
+    Args:
+      index: the flat index (projection family + projected points; its
+        ``data`` may be empty when ``store_raw=False``).
+      codec: the trained codec (pytree — traces through jit).
+      codes: (n, S) uint8 codes for every indexed point.
+      q: (B, d) query batch.
+      k / T / R: answer size, candidate budget (βn + k), rerank budget.
+      store_raw: verify the final R candidates against float vectors
+        (exact distances) vs. answer straight from ADC estimates.
+
+    Returns (indices (B, k) int32, distances (B, k) float32).
+    """
+    from repro.kernels import ops as kops
+
+    assert k <= R <= T, f"need k <= R <= T, got k={k} R={R} T={T}"
+    q = jnp.asarray(q, jnp.float32)
+    if q.ndim == 1:
+        q = q[None]
+    qp = index.family.project(q)  # (B, m)
+
+    # 1-2. estimate + select (identical to the float pipeline)
+    d2p = kops.pairwise_sq_dist(qp, index.projected, force=force)  # (B, n)
+    _, cand = jax.lax.top_k(-d2p, T)  # (B, T)
+
+    # 3. rerank: ADC on the candidates' codes, keep the R best.
+    # gather BEFORE widening: only B·T code rows are ever touched at
+    # int32 (adc_dist casts internally); the n-row store stays uint8
+    ccodes = jnp.asarray(codes)[cand]  # (B, T, S)
+    direct = getattr(codec, "adc_direct", None)
+    if direct is not None:  # affine codecs skip the LUT contraction
+        d2a = direct(q, ccodes)  # (B, T)
+    else:
+        lut = codec.lookup_tables(q)  # (B, S, V)
+        d2a = kops.adc_dist(ccodes, lut, force=force)  # (B, T)
+    negR, selR = jax.lax.top_k(-d2a, R)
+    rcand = jnp.take_along_axis(cand, selR, axis=1)  # (B, R)
+
+    if not store_raw:
+        # codes-only: top_k output is already ascending in ADC distance
+        idx = rcand[:, :k]
+        dd = jnp.sqrt(jnp.maximum(-negR[:, :k], 0.0))
+        return idx.astype(jnp.int32), dd
+
+    # 4. verify: exact distances on the R survivors
+    cpts = index.data[rcand]  # (B, R, d)
+    d2 = jnp.sum((cpts - q[:, None, :]) ** 2, axis=-1)  # (B, R)
+    negk, sel = jax.lax.top_k(-d2, k)
+    idx = jnp.take_along_axis(rcand, sel, axis=1)
+    return idx.astype(jnp.int32), jnp.sqrt(jnp.maximum(-negk, 0.0))

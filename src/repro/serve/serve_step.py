@@ -44,6 +44,17 @@ class RetrievalStep:
     serving pause.  Payloads are addressed by the index's global ids,
     which are append-order and never recycled, so the value store is a
     plain append-only array.
+
+    Quantized datastores: pass the quant options through
+    ``index_config`` (e.g. ``IndexConfig(backend="flat-pq")`` or
+    ``options={"quant": "sq8", "store_raw": False}``) and the KEY side
+    of the datastore is stored as codes.  ``key_bytes_per_point``
+    reports the distance-storage footprint per key;
+    ``key_raw_bytes_per_point`` the float32 rows retained for exact
+    verify — the capacity play (4-16× more entries per device) needs
+    ``store_raw=False``, where the latter drops to 0.  Payload
+    gathering is unchanged: codes only ever approximate distances,
+    never values.
     """
 
     def __init__(self, keys, values, *, k: int = 8,
@@ -64,6 +75,22 @@ class RetrievalStep:
     @property
     def streaming(self) -> bool:
         return "stream" in getattr(self.index, "capabilities", frozenset())
+
+    @property
+    def key_bytes_per_point(self) -> float:
+        """Distance-storage bytes per datastore key (quantization-aware:
+        codes + amortized codebooks for quantized backends).  Raw
+        float32 rows kept for exact verify are NOT included — see
+        ``key_raw_bytes_per_point`` for the full resident picture."""
+        fn = getattr(self.index, "bytes_per_point", None)
+        return float(fn()) if fn else 4.0 * self.index.d
+
+    @property
+    def key_raw_bytes_per_point(self) -> float:
+        """Full-precision bytes per key retained for exact verification
+        (0 on codes-only datastores, ``store_raw=False``)."""
+        fn = getattr(self.index, "raw_bytes_per_point", None)
+        return float(fn()) if fn else 4.0 * self.index.d
 
     def __call__(self, queries):
         import numpy as np

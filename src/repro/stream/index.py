@@ -26,9 +26,17 @@ ordinary facade call and mutate from there:
     index.flush()                       # seal the delta eagerly
 
 options: ``delta_threshold`` (flush trigger, default 512),
-``segment_backend`` (default "pmtree"), ``max_segments`` (compaction
-trigger, default 4), ``max_dead_fraction`` (segment rot trigger,
-default 0.5), ``use_kernels`` (delta-scan dispatch, default True).
+``segment_backend`` (default "pmtree"; "flat" when ``quant`` is set),
+``max_segments`` (compaction trigger, default 4), ``max_dead_fraction``
+(segment rot trigger, default 0.5), ``use_kernels`` (delta-scan
+dispatch, default True).
+
+Quantized segments: with ``options={"quant": "sq8"|"pq", ...}`` sealed
+segments are served by the quantized flat backend (DESIGN.md §8) —
+each seal trains a codec on exactly the rows it freezes, and
+compaction re-trains codebooks over the merged live rows, so codebook
+drift is bounded by segment lifetime.  The delta buffer always stays
+float32 (exact scan): quantization is a property of SEALED data only.
 """
 from __future__ import annotations
 
@@ -53,7 +61,18 @@ class StreamingIndex(BaseIndex):
     def _build(self) -> None:
         opts = self.config.options
         self.delta_threshold = int(opts.get("delta_threshold", 512))
-        self.segment_backend = str(opts.get("segment_backend", "pmtree"))
+        # quantization lives in the flat backend's verify tier, so a
+        # quant request flips the default segment backend to "flat" —
+        # and an explicit backend that would silently ignore the quant
+        # options is rejected rather than served as float32
+        default_segment = "flat" if opts.get("quant") else "pmtree"
+        self.segment_backend = str(opts.get("segment_backend",
+                                            default_segment))
+        if opts.get("quant") and self.segment_backend not in ("flat",
+                                                              "flat-pq"):
+            raise ValueError(
+                f"segment_backend {self.segment_backend!r} cannot honor "
+                "quantized segments; use 'flat' or 'flat-pq'")
         self.max_segments = int(opts.get("max_segments", 4))
         self.max_dead_fraction = float(opts.get("max_dead_fraction", 0.5))
         self._force = None if opts.get("use_kernels", True) else "ref"
@@ -236,6 +255,27 @@ class StreamingIndex(BaseIndex):
     def total_assigned(self) -> int:
         """Ids ever assigned (monotone; tombstones included)."""
         return self._total
+
+    def bytes_per_point(self) -> float:
+        """Resident distance-storage bytes per LIVE point: sealed
+        segments (possibly quantized) charge every stored row —
+        tombstoned-but-uncompacted rows still occupy storage — plus the
+        float32 delta, divided by the live count."""
+        if self.n == 0:
+            return 0.0
+        seg_bytes = sum(s.bytes_per_point() * s.size for s in self.segments)
+        return (seg_bytes + 4.0 * self.d * len(self.delta)) / self.n
+
+    def raw_bytes_per_point(self) -> float:
+        """Float32 bytes per live point resident in the append-only
+        store.  The streaming index ALWAYS retains raw rows (compaction
+        rebuilds — and codebook re-training — need them), so quantized
+        segments shrink the verify-tier reads, not total residency;
+        codes-only capacity wins need a static index with
+        ``store_raw=False``."""
+        if self.n == 0:
+            return 0.0
+        return 4.0 * self.d * self._total / self.n
 
     def live_ids(self) -> np.ndarray:
         """Global ids currently alive (ascending, int64)."""

@@ -51,6 +51,12 @@ class Segment:
     def size(self) -> int:
         return self.ids.size
 
+    def bytes_per_point(self) -> float:
+        """Distance-storage bytes/point of the backing index (codes +
+        codebooks for quantized segments, raw float32 otherwise)."""
+        fn = getattr(self.index, "bytes_per_point", None)
+        return float(fn()) if fn else 4.0 * self.index.d
+
     @property
     def live(self) -> int:
         return self.ids.size - self.dead

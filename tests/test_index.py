@@ -298,3 +298,29 @@ class TestConfig:
         cfg = IndexConfig(options={"a": 1}).with_options(b=2)
         assert dict(cfg.options) == {"a": 1, "b": 2}
         assert hash(cfg) is not None
+
+    def test_nested_options_hash_deep_freeze(self):
+        """Regression: configs with nested dict/list options (the quant
+        codec knobs) must stay usable as cache / sweep keys — this used
+        to raise TypeError: unhashable type: 'dict'."""
+        a = IndexConfig(backend="flat", options={"pq": {"m_codebooks": 16},
+                                                 "shards": [1, 2]})
+        b = IndexConfig(backend="flat", options={"pq": {"m_codebooks": 16},
+                                                 "shards": [1, 2]})
+        c = IndexConfig(backend="flat", options={"pq": {"m_codebooks": 32},
+                                                 "shards": [1, 2]})
+        assert hash(a) == hash(b) and a == b and a != c
+        assert {a: "a"}[b] == "a"
+        # nested values froze: mappings → FrozenOptions, lists → tuples
+        from repro.index.config import FrozenOptions
+
+        assert isinstance(a.options["pq"], FrozenOptions)
+        assert a.options["shards"] == (1, 2)
+        # equality still works against plain nested dicts
+        assert a.options == {"pq": {"m_codebooks": 16}, "shards": (1, 2)}
+
+    def test_nested_options_do_not_alias_caller_dict(self):
+        inner = {"m_codebooks": 16}
+        cfg = IndexConfig(options={"pq": inner})
+        inner["m_codebooks"] = 99
+        assert cfg.options["pq"]["m_codebooks"] == 16

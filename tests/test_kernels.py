@@ -11,6 +11,7 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref
+from repro.kernels.adc import adc_dist_pallas
 from repro.kernels.pairwise_dist import pairwise_sq_dist_pallas
 from repro.kernels.project_dist import project_dist_pallas
 from repro.kernels.topk import topk_smallest_pallas
@@ -137,6 +138,76 @@ class TestTopK:
         g1, i1 = topk_smallest_pallas(d, 8, block_n=128, interpret=True)
         g2, i2 = topk_smallest_pallas(d, 8, block_n=1024, interpret=True)
         np.testing.assert_allclose(g1, g2, rtol=1e-6)
+
+
+class TestADC:
+    """Asymmetric-distance kernel vs the LUT-gather oracle."""
+
+    # (B, N, S, V) — incl. non-tile-multiples and the B ∈ {1, 7} sweep
+    SHAPES = [
+        (1, 1, 1, 2),
+        (1, 50, 16, 256),
+        (7, 300, 16, 256),
+        (7, 129, 33, 100),
+        (3, 513, 8, 17),
+        (16, 64, 64, 256),
+    ]
+
+    @pytest.mark.parametrize("B,N,S,V", SHAPES)
+    def test_matches_ref(self, B, N, S, V):
+        rng = np.random.default_rng(B * 1000 + N + S + V)
+        codes = jnp.asarray(rng.integers(0, V, size=(N, S)), jnp.int32)
+        lut = jnp.asarray(rng.normal(size=(B, S, V)) ** 2, jnp.float32)
+        got = adc_dist_pallas(codes, lut, interpret=True)
+        want = ref.adc_dist(codes, lut)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4 * S)
+
+    def test_uint8_codes_accepted(self):
+        rng = np.random.default_rng(3)
+        codes = jnp.asarray(rng.integers(0, 256, size=(40, 8)), jnp.uint8)
+        lut = jnp.asarray(rng.normal(size=(2, 8, 256)) ** 2, jnp.float32)
+        got = adc_dist_pallas(codes, lut, interpret=True)
+        np.testing.assert_allclose(got, ref.adc_dist(codes, lut),
+                                   rtol=1e-5, atol=1e-3)
+
+    def test_slot_tiling_matches_onepass(self):
+        """block_s < S (multi-step slot accumulation) must not change
+        the answer."""
+        rng = np.random.default_rng(5)
+        codes = jnp.asarray(rng.integers(0, 32, size=(70, 24)), jnp.int32)
+        lut = jnp.asarray(rng.normal(size=(4, 24, 32)) ** 2, jnp.float32)
+        a = adc_dist_pallas(codes, lut, block_s=4, interpret=True)
+        b = adc_dist_pallas(codes, lut, block_s=24, interpret=True)
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+
+    @pytest.mark.parametrize("B", [1, 7])
+    def test_batched_codes_dispatch(self, B):
+        """Per-query candidate codes (B, N, S) through ops.adc_dist:
+        interpret (vmapped kernel) must match ref."""
+        from repro.kernels import ops
+
+        rng = np.random.default_rng(20 + B)
+        codes = jnp.asarray(rng.integers(0, 16, size=(B, 33, 6)), jnp.int32)
+        lut = jnp.asarray(rng.normal(size=(B, 6, 16)) ** 2, jnp.float32)
+        a = np.asarray(ops.adc_dist(codes, lut, force="ref"))
+        b = np.asarray(ops.adc_dist(codes, lut, force="interpret"))
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-4)
+
+    @given(
+        B=st.integers(1, 8),
+        N=st.integers(1, 120),
+        S=st.integers(1, 20),
+        V=st.integers(2, 64),
+        seed=st.integers(0, 100),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_property_random_shapes(self, B, N, S, V, seed):
+        rng = np.random.default_rng(seed)
+        codes = jnp.asarray(rng.integers(0, V, size=(N, S)), jnp.int32)
+        lut = jnp.asarray(rng.normal(size=(B, S, V)) ** 2, jnp.float32)
+        got = adc_dist_pallas(codes, lut, interpret=True)
+        np.testing.assert_allclose(got, ref.adc_dist(codes, lut),
+                                   rtol=1e-4, atol=1e-3)
 
 
 class TestOpsDispatch:

@@ -1,0 +1,402 @@
+"""The repro.quant subsystem: codecs, the ADC estimator's accuracy
+contract, the quantized flat pipeline behind the facade, streaming
+quantized segments, and the serving integration (DESIGN.md §8)."""
+import numpy as np
+import pytest
+
+from conftest import make_clustered
+from repro.index import (
+    IndexConfig,
+    SearchResult,
+    available_backends,
+    backend_capabilities,
+    build_index,
+)
+from repro.kernels import ref
+from repro.quant import PQCodec, SQ8Codec, train_codec
+
+K = 10
+NO_KERNELS = {"use_kernels": False}  # CPU test runs use the jnp oracle
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    return make_clustered(1500, 32, n_clusters=20, seed=0)
+
+
+@pytest.fixture(scope="module")
+def queries(dataset):
+    rng = np.random.default_rng(1)
+    return dataset[rng.integers(0, len(dataset), 7)] + 0.05
+
+
+@pytest.fixture(scope="module")
+def exact(dataset, queries):
+    d = np.linalg.norm(dataset[None] - queries[:, None], axis=-1)
+    return np.argsort(d, axis=1)[:, :K]
+
+
+def _recall(res, exact_ids):
+    return float(np.mean([
+        len(set(row.tolist()) & set(ex.tolist())) / len(ex)
+        for row, ex in zip(res.indices, exact_ids)
+    ]))
+
+
+class TestSQ8Codec:
+    def test_roundtrip_error_bounded_by_grid_step(self, dataset):
+        codec = train_codec("sq8", dataset)
+        codes = np.asarray(codec.encode(dataset))
+        assert codes.dtype == np.uint8
+        assert codes.shape == dataset.shape
+        err = np.abs(np.asarray(codec.decode(codes)) - dataset)
+        # rounding to the 256-level grid: off by at most half a step
+        step = np.asarray(codec.scale)
+        assert (err <= step[None, :] * 0.5 + 1e-5).all()
+
+    def test_bytes_per_point(self, dataset):
+        codec = train_codec("sq8", dataset)
+        assert codec.bytes_per_point == dataset.shape[1]  # 1 byte/dim
+        assert codec.n_slots == dataset.shape[1]
+        assert codec.n_values == 256
+
+    def test_constant_dimension_is_safe(self):
+        x = np.ones((50, 4), np.float32)
+        x[:, 1] = np.linspace(0, 1, 50)
+        codec = train_codec("sq8", x)
+        rec = np.asarray(codec.decode(codec.encode(x)))
+        np.testing.assert_allclose(rec, x, atol=1e-2)
+
+    def test_lut_matches_decoded_distance(self, dataset, queries):
+        codec = train_codec("sq8", dataset[:100])
+        codes = codec.encode(dataset[:100])
+        lut = codec.lookup_tables(queries)
+        got = np.asarray(ref.adc_dist(codes, lut))
+        dec = np.asarray(codec.decode(codes))
+        want = np.sum((dec[None] - queries[:, None]) ** 2, axis=-1)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)
+
+    def test_adc_direct_matches_lut_form(self, dataset, queries):
+        """The affine fast path the pipeline uses must equal the
+        generic LUT contraction it bypasses."""
+        codec = train_codec("sq8", dataset[:100])
+        codes = np.asarray(codec.encode(dataset[:100]))
+        via_lut = np.asarray(
+            ref.adc_dist(codes, codec.lookup_tables(queries)))
+        bcodes = np.broadcast_to(
+            codes[None], (len(queries),) + codes.shape)
+        direct = np.asarray(codec.adc_direct(queries, bcodes))
+        np.testing.assert_allclose(direct, via_lut, rtol=1e-4, atol=1e-2)
+
+
+class TestPQCodec:
+    def test_codes_shape_and_range(self, dataset):
+        codec = train_codec("pq", dataset, m_codebooks=8, seed=0)
+        codes = np.asarray(codec.encode(dataset))
+        assert codes.dtype == np.uint8
+        assert codes.shape == (len(dataset), 8)
+        assert codes.max() < codec.n_values
+
+    def test_nondivisible_dim_pads(self):
+        x = np.random.default_rng(0).normal(size=(300, 33)).astype(np.float32)
+        codec = train_codec("pq", x, m_codebooks=8, seed=0)
+        dec = np.asarray(codec.decode(codec.encode(x)))
+        assert dec.shape == x.shape  # padding trimmed back off
+
+    def test_centroid_count_clamped_to_half_n(self):
+        x = np.random.default_rng(1).normal(size=(40, 8)).astype(np.float32)
+        codec = train_codec("pq", x, m_codebooks=4, seed=0)
+        assert codec.n_values <= 20
+
+    def test_lut_matches_decoded_distance(self, dataset, queries):
+        codec = train_codec("pq", dataset, m_codebooks=8, seed=0)
+        codes = codec.encode(dataset[:200])
+        lut = codec.lookup_tables(queries)
+        got = np.asarray(ref.adc_dist(codes, lut))
+        dec = np.asarray(codec.decode(codes))
+        want = np.sum((dec[None] - queries[:, None]) ** 2, axis=-1)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-1)
+
+    def test_unknown_codec_name(self, dataset):
+        with pytest.raises(KeyError, match="unknown codec"):
+            train_codec("vq9000", dataset)
+
+
+class TestADCKernelParity:
+    """Pallas ADC kernel (interpret mode) vs the jnp oracle — the
+    hypothesis-free twin of tests/test_kernels.py::TestADC, so tier-1
+    exercises the kernel even where hypothesis is absent."""
+
+    @pytest.mark.parametrize("B", [1, 7])
+    def test_shared_codes(self, B):
+        from repro.kernels.adc import adc_dist_pallas
+
+        rng = np.random.default_rng(40 + B)
+        codes = rng.integers(0, 256, size=(213, 16)).astype(np.uint8)
+        lut = (rng.normal(size=(B, 16, 256)) ** 2).astype(np.float32)
+        got = np.asarray(adc_dist_pallas(codes, lut, interpret=True))
+        want = np.asarray(ref.adc_dist(codes, lut))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+    @pytest.mark.parametrize("B", [1, 7])
+    def test_per_query_codes(self, B):
+        from repro.kernels import ops
+
+        rng = np.random.default_rng(50 + B)
+        codes = rng.integers(0, 32, size=(B, 77, 9))
+        lut = (rng.normal(size=(B, 9, 32)) ** 2).astype(np.float32)
+        a = np.asarray(ops.adc_dist(codes, lut, force="ref"))
+        b = np.asarray(ops.adc_dist(codes, lut, force="interpret"))
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-4)
+
+    def test_codec_luts_through_kernel(self, dataset, queries):
+        """End-to-end: a real trained codec's LUTs through the Pallas
+        kernel equal decoded-point distances."""
+        from repro.kernels.adc import adc_dist_pallas
+
+        codec = train_codec("pq", dataset, m_codebooks=8, seed=0)
+        codes = np.asarray(codec.encode(dataset[:150]))
+        lut = np.asarray(codec.lookup_tables(queries))
+        got = np.asarray(adc_dist_pallas(codes, lut, interpret=True))
+        dec = np.asarray(codec.decode(codes))
+        want = np.sum((dec[None] - queries[:, None]) ** 2, axis=-1)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-1)
+
+
+class TestADCErrorContract:
+    """The estimator-quality law the rerank tier leans on: ADC error
+    vs exact squared distances shrinks as codebooks are added."""
+
+    def test_error_monotone_in_codebook_count(self, dataset, queries):
+        exact_d2 = np.sum(
+            (dataset[:500][None] - queries[:, None]) ** 2, axis=-1)
+        errs = []
+        for m in (2, 4, 8, 16):
+            codec = train_codec("pq", dataset[:500], m_codebooks=m, seed=0)
+            lut = codec.lookup_tables(queries)
+            adc = np.asarray(ref.adc_dist(codec.encode(dataset[:500]), lut))
+            errs.append(float(np.mean(np.abs(adc - exact_d2))))
+        # mean |ADC − exact| must not grow as the codebook count doubles
+        for lo, hi in zip(errs[1:], errs[:-1]):
+            assert lo <= hi * 1.05, f"ADC error not monotone: {errs}"
+        assert errs[-1] < errs[0] * 0.5, f"no real improvement: {errs}"
+
+    def test_sq8_is_near_exact(self, dataset, queries):
+        codec = train_codec("sq8", dataset[:500])
+        adc = np.asarray(ref.adc_dist(
+            codec.encode(dataset[:500]), codec.lookup_tables(queries)))
+        exact_d2 = np.sum(
+            (dataset[:500][None] - queries[:, None]) ** 2, axis=-1)
+        assert np.mean(np.abs(adc - exact_d2) / np.maximum(exact_d2, 1.0)
+                       ) < 0.01
+
+
+class TestQuantizedFlatBackend:
+    @pytest.fixture(scope="class", params=["sq8", "pq"])
+    def quant_index(self, request, dataset):
+        return build_index(dataset, IndexConfig(
+            backend="flat", seed=0,
+            options={"quant": request.param, "rerank": 64, **NO_KERNELS}))
+
+    def test_recall_matches_float_flat(self, quant_index, dataset, queries,
+                                       exact):
+        flat = build_index(dataset, IndexConfig(backend="flat", seed=0,
+                                                options=NO_KERNELS))
+        ref_rec = _recall(flat.search(queries, K), exact)
+        rec = _recall(quant_index.search(queries, K), exact)
+        assert rec >= ref_rec - 0.05, (rec, ref_rec)
+
+    def test_distances_exact_when_raw_kept(self, quant_index, dataset,
+                                           queries):
+        res = quant_index.search(queries[:2], 5)
+        for b in range(2):
+            for i, d in zip(res.indices[b], res.distances[b]):
+                true = np.linalg.norm(dataset[i] - queries[b])
+                assert d == pytest.approx(true, rel=1e-4)
+
+    @pytest.mark.parametrize("batch", [1, 7])
+    def test_shapes_and_dtypes(self, quant_index, queries, batch):
+        res = quant_index.search(queries[:batch], K)
+        assert isinstance(res, SearchResult)
+        assert res.indices.shape == res.distances.shape == (batch, K)
+        assert res.indices.dtype == np.int32
+        assert res.distances.dtype == np.float32
+
+    def test_padding_when_k_exceeds_n(self, dataset, queries):
+        small = build_index(dataset[:20], IndexConfig(
+            backend="flat", seed=0,
+            options={"quant": "sq8", **NO_KERNELS}))
+        res = small.search(queries[:2], 30)
+        assert res.indices.shape == (2, 30)
+        assert (res.indices[:, 20:] == -1).all()
+        assert np.isinf(res.distances[:, 20:]).all()
+
+    def test_workstats_count_rerank_and_adc(self, quant_index, queries):
+        res = quant_index.search(queries, K)
+        B = len(queries)
+        assert res.stats.candidates_verified == B * 64  # exact verifies = R
+        assert res.stats.point_distance_computations > 0  # ADC tier
+
+
+class TestCodesOnlyMode:
+    def test_raw_vectors_dropped(self, dataset):
+        index = build_index(dataset, IndexConfig(
+            backend="flat", seed=0,
+            options={"quant": "sq8", "store_raw": False, **NO_KERNELS}))
+        assert index.data.shape[0] == 0
+        assert index.impl.data.shape[0] == 0
+        assert index.raw_bytes_per_point() == 0.0
+
+    def test_still_answers_with_high_recall(self, dataset, queries, exact):
+        index = build_index(dataset, IndexConfig(
+            backend="flat", seed=0,
+            options={"quant": "sq8", "store_raw": False, **NO_KERNELS}))
+        res = index.search(queries, K)
+        assert _recall(res, exact) >= 0.8
+        assert res.stats.candidates_verified == 0  # nothing exact-verified
+
+    def test_distances_are_adc_estimates(self, dataset, queries):
+        index = build_index(dataset, IndexConfig(
+            backend="flat", seed=0,
+            options={"quant": "sq8", "store_raw": False, **NO_KERNELS}))
+        res = index.search(queries[:1], 3)
+        true = np.linalg.norm(dataset[res.indices[0]] - queries[0], axis=-1)
+        np.testing.assert_allclose(res.distances[0], true, rtol=0.1,
+                                   atol=0.05)
+
+
+class TestFlatPQBackend:
+    def test_registered_with_quant_capability(self):
+        assert "flat-pq" in available_backends()
+        assert backend_capabilities("flat-pq") == {"ann", "quant"}
+        assert "flat-pq" in available_backends("quant")
+
+    def test_trains_pq_by_default(self, dataset):
+        index = build_index(dataset, IndexConfig(backend="flat-pq", seed=0,
+                                                 options=NO_KERNELS))
+        assert isinstance(index.codec, PQCodec)
+        assert index.bytes_per_point() < 4.0 * dataset.shape[1]
+
+    def test_explicit_codec_respected(self, dataset):
+        index = build_index(dataset, IndexConfig(
+            backend="flat-pq", seed=0, options={"quant": "sq8",
+                                                **NO_KERNELS}))
+        assert isinstance(index.codec, SQ8Codec)
+
+    def test_nested_codec_options_reach_training(self, dataset):
+        index = build_index(dataset, IndexConfig(
+            backend="flat-pq", seed=0,
+            options={"pq": {"m_codebooks": 4}, **NO_KERNELS}))
+        assert index.codec.n_slots == 4
+
+    def test_search_through_facade(self, dataset, queries, exact):
+        index = build_index(dataset, IndexConfig(backend="flat-pq", seed=0,
+                                                 options=NO_KERNELS))
+        assert _recall(index.search(queries, K), exact) >= 0.7
+
+
+class TestStreamingQuantizedSegments:
+    @pytest.fixture()
+    def stream(self, dataset):
+        return build_index(dataset[:600], IndexConfig(
+            backend="streaming", seed=0,
+            options={"quant": "sq8", "delta_threshold": 128,
+                     "max_segments": 3, **NO_KERNELS}))
+
+    def test_segments_default_to_quantized_flat(self, stream):
+        assert stream.segment_backend == "flat"
+        assert all(s.backend == "flat" for s in stream.segments)
+        assert all(s.index.codec is not None for s in stream.segments)
+
+    def test_non_quant_segment_backend_rejected(self, dataset):
+        """quant + a segment backend that would silently ignore it must
+        fail loudly, not serve float32."""
+        with pytest.raises(ValueError, match="cannot honor quantized"):
+            build_index(dataset[:100], IndexConfig(
+                backend="streaming",
+                options={"quant": "sq8", "segment_backend": "pmtree"}))
+
+    def test_delta_stays_float32(self, stream):
+        stream.insert(np.zeros((5, stream.d), np.float32))
+        assert stream.delta.vectors.dtype == np.float32
+
+    def test_insert_visible_delete_absent_across_seal(self, stream):
+        probe = np.full((1, stream.d), 29.0, np.float32)
+        rng = np.random.default_rng(3)
+        new = stream.insert(
+            probe + rng.normal(size=(3, stream.d)).astype(np.float32) * 0.01)
+        res = stream.search(probe, 3)
+        assert set(res.indices[0].tolist()) == set(int(i) for i in new)
+        stream.flush()  # sealed into a QUANTIZED segment
+        res = stream.search(probe, 3)
+        assert set(res.indices[0].tolist()) == set(int(i) for i in new)
+        stream.delete(new)
+        assert not set(res.indices[0].tolist()) & set(
+            stream.search(probe, 5).indices[0].tolist())
+
+    def test_compaction_retrains_codebooks(self, stream):
+        rng = np.random.default_rng(4)
+        before = stream.n_compactions
+        for _ in range(4):
+            stream.insert(rng.normal(size=(128, stream.d)).astype(np.float32))
+        assert stream.n_compactions > before
+        # every surviving segment holds a codec trained on its own rows
+        assert all(s.index.codec is not None for s in stream.segments)
+
+    def test_recall_parity_with_fresh_static_index(self, stream, queries):
+        rng = np.random.default_rng(5)
+        stream.delete(rng.choice(stream.live_ids(), 50, replace=False))
+        stream.flush()
+        live = stream.live_ids()
+        vectors = stream.get_vectors(live)
+        d = np.linalg.norm(vectors[None] - queries[:, None], axis=-1)
+        exact_live = live[np.argsort(d, axis=1)[:, :K]]
+        res = stream.search(queries, K)
+        rec = float(np.mean([
+            len(set(row.tolist()) & set(ex.tolist())) / K
+            for row, ex in zip(res.indices, exact_live)
+        ]))
+        assert rec >= 0.85, rec
+
+    def test_bytes_per_point_reflects_quantized_segments(self, stream):
+        stream.flush()
+        # all rows sealed into sq8 segments: ≈ d bytes/pt ≪ 4d float32
+        assert stream.delta_size == 0
+        assert stream.bytes_per_point() < 2.0 * stream.d
+
+
+class TestServeQuantizedDatastore:
+    def test_retrieval_step_over_quantized_keys(self, dataset, queries):
+        from repro.serve.serve_step import make_retrieval_step
+
+        values = np.arange(len(dataset), dtype=np.int64) * 10
+        step, index = make_retrieval_step(
+            dataset, values, k=5,
+            index_config=IndexConfig(backend="flat-pq", seed=0,
+                                     options=NO_KERNELS))
+        payloads, valid, distances, res = step(queries)
+        assert payloads.shape == (len(queries), 5)
+        assert valid.all()
+        np.testing.assert_array_equal(payloads, res.indices * 10)
+        assert step.key_bytes_per_point < 4.0 * dataset.shape[1]
+        assert step.key_raw_bytes_per_point == 4.0 * dataset.shape[1]
+
+    def test_codes_only_datastore_drops_raw_keys(self, dataset):
+        from repro.serve.serve_step import make_retrieval_step
+
+        step, _ = make_retrieval_step(
+            dataset, np.arange(len(dataset)), k=3,
+            index_config=IndexConfig(
+                backend="flat", seed=0,
+                options={"quant": "sq8", "store_raw": False,
+                         **NO_KERNELS}))
+        assert step.key_raw_bytes_per_point == 0.0
+
+    def test_float_datastore_reports_full_bytes(self, dataset):
+        from repro.serve.serve_step import make_retrieval_step
+
+        step, _ = make_retrieval_step(
+            dataset[:200], np.arange(200), k=3,
+            index_config=IndexConfig(backend="flat", seed=0,
+                                     options=NO_KERNELS))
+        assert step.key_bytes_per_point == 4.0 * dataset.shape[1]
