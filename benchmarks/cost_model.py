@@ -1,4 +1,4 @@
-"""Table 2 reproduction: PM-tree vs R-tree computation cost.
+"""Table 2 reproduction + the fused-pipeline HBM traffic model.
 
 Two measurements per dataset:
   (a) the paper's COST MODEL: Eq. 7 for the PM-tree (node access
@@ -10,6 +10,11 @@ Two measurements per dataset:
 
 The claim under test: CC(PM-tree) < CC(R-tree) at the radius returning
 ≈8% of points (paper: 5-46% reduction).
+
+Also home to :func:`query_traffic_model` — the per-stage HBM byte
+model of the flat query pipeline (DESIGN.md §9), unfused vs. fused,
+which documents the ≥2× verify-stage traffic reduction from
+eliminating the (B, T, d) candidate gather.
 """
 from __future__ import annotations
 
@@ -17,8 +22,43 @@ import math
 
 import numpy as np
 
-from .common import csv_row
+from .common import csv_row, publish_summary
 from .datasets import make_dataset, make_queries
+
+
+def query_traffic_model(n: int, d: int, m: int, B: int, T: int, k: int,
+                        *, fused: bool, select_passes: int = 16) -> dict:
+    """Per-stage HBM bytes of one batched flat query (float32).
+
+    ESTIMATE (both pipelines): stream the build-time (n, m) projected
+    points once and write the (B, n) projected distances (the flat
+    index precomputes x@A, so the estimate never touches the d-dim
+    rows; the fused project kernel covers the from-raw variant).
+
+    SELECT: the unfused ``lax.top_k`` reads the (B, n) row once (sort
+    state stays on-chip; this flatters the unfused side).  The fused
+    radius kernel re-reads the (B, n) row once per threshold pass
+    (ladder + bisections + compaction ≈ ``select_passes``) and writes
+    the (B, T_pad) compacted buffer.
+
+    VERIFY: the unfused path gathers ``data[cand]`` — reads B·T·d from
+    the store, WRITES the (B, T, d) candidate tensor to HBM, and reads
+    it back for the distance reduction (3 traversals).  The fused
+    kernel DMAs each candidate row HBM→VMEM exactly once and keeps the
+    running top-k in VMEM scratch: 1 traversal, the gather term gone.
+    """
+    f32 = 4
+    est = n * m * f32 + B * n * f32
+    if fused:
+        t_pad = T + max(256, T // 8)
+        select = select_passes * B * n * f32 + 2 * B * t_pad * f32
+        verify = B * T * d * f32
+    else:
+        select = B * n * f32
+        verify = 3 * B * T * d * f32
+    answer = B * k * f32 * 2
+    return {"estimate": est, "select": select, "verify": verify,
+            "answer": answer, "total": est + select + verify + answer}
 
 
 def _pm_cost_model(tree, F_vals, F_cdf, r_q: float) -> float:
@@ -108,4 +148,27 @@ def run(quick: bool = True):
             "CC_pm=%.0f;CC_rtree=%.0f;reduction=%.2f;actual_pm=%.0f"
             % (cc_pm, cc_rt, reduction, actual_pm),
         ))
+
+    # fused-pipeline HBM traffic model (DESIGN.md §9): verify-stage
+    # bytes with and without the (B, T, d) candidate gather
+    traffic = {}
+    for n in ([32768, 131072] if quick else [32768, 131072, 1 << 20]):
+        B, d, m, k = 8, 128, 15, 10
+        T = int(0.0972 * n) + k  # exact-solve β at (c=1.5, m=15)
+        unf = query_traffic_model(n, d, m, B, T, k, fused=False)
+        fus = query_traffic_model(n, d, m, B, T, k, fused=True)
+        vratio = unf["verify"] / max(fus["verify"], 1)
+        tratio = unf["total"] / max(fus["total"], 1)
+        traffic[n] = {"unfused": unf, "fused": fus,
+                      "verify_reduction": vratio,
+                      "total_reduction": tratio}
+        out.append(csv_row(
+            f"hbm_traffic_n{n}", 0.0,
+            "verify_unfused_MB=%.1f;verify_fused_MB=%.1f;"
+            "verify_reduction=%.2f;total_reduction=%.2f"
+            % (unf["verify"] / 1e6, fus["verify"] / 1e6, vratio, tratio)))
+    publish_summary("hbm_traffic_model", B=8, d=128, m=15, k=10,
+                    sizes=traffic,
+                    claim="fused verify eliminates the (B,T,d) HBM "
+                          "write+read: >= 2x verify-stage reduction")
     return out

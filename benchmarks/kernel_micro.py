@@ -62,4 +62,44 @@ def run(quick: bool = True):
     wv, _ = ref.topk_smallest(dmat[:4, :512], k)
     out.append(csv_row("kernel_topk", dt3 * 1e6,
                        "interp_maxerr=%.1e" % float(jnp.abs(gv - wv).max())))
+
+    # SELECT stage: radius-threshold selection at candidate-budget scale
+    # (T ≫ 128, where the selection network does not apply) — oracle
+    # timing vs lax.top_k plus interpret-mode kernel parity
+    from repro.kernels.select import radius_select_pallas
+    from repro.kernels.verify import verify_topk_pallas
+
+    T = max(N // 10, 64)
+    f4 = jax.jit(lambda d_: ref.radius_select(d_, T)[0])
+    f4(dmat).block_until_ready()
+    _, dt4 = timer(lambda: f4(dmat).block_until_ready(), repeats=5)
+    f4t = jax.jit(lambda d_: ref.topk_smallest(d_, T)[0])
+    f4t(dmat).block_until_ready()
+    _, dt4t = timer(lambda: f4t(dmat).block_until_ready(), repeats=5)
+    dsm = dmat[:4, :512]
+    tau0 = jnp.mean(dsm, axis=1) * (48 / 512)
+    vp, ip, _ = radius_select_pallas(dsm, tau0, 48, T_pad=120, interpret=True)
+    gv = -jax.lax.top_k(-vp, 48)[0]
+    wv, _ = ref.topk_smallest(dsm, 48)
+    out.append(csv_row(
+        "kernel_radius_select", dt4 * 1e6,
+        "topk_us=%.1f;T=%d;interp_maxerr=%.1e"
+        % (dt4t * 1e6, T, float(jnp.abs(gv - wv).max()))))
+
+    # VERIFY stage: gather-free verification — oracle timing plus
+    # interpret-mode kernel parity (kernel DMA-gathers row by row, so
+    # keep the interpret check small)
+    cand = jnp.asarray(
+        np.stack([rng.permutation(N)[:T] for _ in range(B)]), jnp.int32)
+    f5 = jax.jit(lambda c: ref.verify_topk(x, q, c, k)[0])
+    f5(cand).block_until_ready()
+    _, dt5 = timer(lambda: f5(cand).block_until_ready(), repeats=5)
+    small_c = cand[:2, :64]
+    gv, gi = verify_topk_pallas(x, q[:2], small_c, 8, interpret=True)
+    wv, wi = ref.verify_topk(x, q[:2], small_c, 8)
+    idx_ok = float(jnp.mean((gi == wi).astype(jnp.float32)))
+    out.append(csv_row(
+        "kernel_verify_topk", dt5 * 1e6,
+        "T=%d;interp_maxerr=%.1e;interp_idx_match=%.2f"
+        % (T, float(jnp.abs(gv - wv).max()), idx_ok)))
     return out

@@ -34,6 +34,7 @@ MODULES = [
     ("table6_cp", "benchmarks.cp_queries"),
     ("figs7_14_16_gamma", "benchmarks.gamma_study"),
     ("kernel_micro", "benchmarks.kernel_micro"),
+    ("query_pipeline", "benchmarks.query_pipeline"),
     ("stream_queries", "benchmarks.stream_queries"),
     ("quant_tradeoff", "benchmarks.quant_tradeoff"),
 ]

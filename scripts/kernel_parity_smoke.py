@@ -1,0 +1,74 @@
+"""CI smoke: interpret-mode parity for the fused-pipeline kernels.
+
+Runs the two DESIGN.md §9 kernels — radius-threshold selection and
+gather-free verification — through bit-accurate interpret mode against
+their jnp ref oracles on small random cases and gates on max |Δ|.
+Fast enough for every CI run; the exhaustive shape sweeps live in
+tests/test_kernels.py.
+
+    PYTHONPATH=src python scripts/kernel_parity_smoke.py
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+TOL = 1e-5
+
+
+def main() -> int:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+    from repro.kernels.select import radius_select_pallas
+    from repro.kernels.verify import verify_topk_pallas
+
+    rng = np.random.default_rng(0)
+    failures = []
+
+    # -- radius-select: kernel + finishing top_k vs the top-k contract --
+    for B, N, T in [(1, 100, 7), (5, 700, 200), (3, 257, 40)]:
+        d = jnp.asarray(rng.normal(size=(B, N)) ** 2 * 3, jnp.float32)
+        T_pad = min(T + max(64, T // 8), N)
+        tau0 = jnp.mean(d, axis=1) * max(T / N, 1e-3)
+        vp, ip, cnt = radius_select_pallas(d, tau0, T, T_pad=T_pad,
+                                           interpret=True)
+        neg, pos = jax.lax.top_k(-vp, T)
+        got_v, got_i = -neg, jnp.take_along_axis(ip, pos, axis=1)
+        want_v, want_i = ref.topk_smallest(d, T)
+        dv = float(jnp.abs(got_v - want_v).max())
+        di = int(jnp.sum(got_i != want_i))
+        status = "ok" if (dv <= TOL and di == 0) else "FAIL"
+        print(f"radius_select B={B} N={N} T={T}: max|dv|={dv:.2e} "
+              f"idx_mismatch={di} [{status}]")
+        if status == "FAIL":
+            failures.append(f"radius_select({B},{N},{T})")
+
+    # -- verify-topk: gather-free kernel vs the materializing oracle ----
+    for B, n, d_, Tc, k in [(2, 200, 24, 60, 8), (7, 129, 33, 64, 10)]:
+        data = jnp.asarray(rng.normal(size=(n, d_)), jnp.float32)
+        q = jnp.asarray(rng.normal(size=(B, d_)), jnp.float32)
+        cand = jnp.asarray(
+            np.stack([rng.permutation(n)[:Tc] for _ in range(B)]),
+            jnp.int32)
+        gv, gi = verify_topk_pallas(data, q, cand, k, interpret=True)
+        wv, wi = ref.verify_topk(data, q, cand, k)
+        dv = float(jnp.abs(gv - wv).max())
+        di = int(jnp.sum(gi != wi))
+        status = "ok" if (dv <= 1e-4 * d_ and di == 0) else "FAIL"
+        print(f"verify_topk B={B} n={n} d={d_} Tc={Tc} k={k}: "
+              f"max|dv|={dv:.2e} idx_mismatch={di} [{status}]")
+        if status == "FAIL":
+            failures.append(f"verify_topk({B},{n},{d_},{Tc},{k})")
+
+    if failures:
+        print(f"PARITY SMOKE FAILED: {failures}", file=sys.stderr)
+        return 1
+    print("kernel parity smoke: all gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

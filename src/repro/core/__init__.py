@@ -7,6 +7,8 @@ Public surface:
   pmtree     — PM-tree construction (bulk + paper-faithful insertion)
   pmtree_query — host DFS (counted) and TPU level-synchronous queries
   flat_index — TPU-native dense estimate→select→verify backend
+  fused      — the fused query pipeline: radius-threshold SELECT +
+               gather-free VERIFY (one entry point for all device backends)
   ann        — Algorithms 1-2: (r,c)-BC, (c,k)-ANN (paper-faithful)
   cp         — Algorithms 3-5: (c,k)-ACP branch&bound + radius filtering
   distributed — shard_map sharded index: multi-device ANN / CP
@@ -28,6 +30,7 @@ from .flat_index import (  # noqa: F401
     build_flat_index,
     candidate_budget,
 )
+from .fused import fused_ann_query, select_seed  # noqa: F401
 
 # The backend-pluggable entry point over this module's index families
 # lives in ``repro.index`` (build_index / IndexConfig / SearchResult);

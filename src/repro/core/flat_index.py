@@ -81,7 +81,7 @@ def candidate_budget(params: PMLSHParams, n: int, k: int) -> int:
     return int(min(max(int(np.ceil(params.beta * n)) + k, k), n))
 
 
-@partial(jax.jit, static_argnames=("k", "T", "use_kernels"))
+@partial(jax.jit, static_argnames=("k", "T", "use_kernels", "fused", "force"))
 def ann_query(
     index: FlatIndex,
     q: jax.Array,
@@ -89,6 +89,8 @@ def ann_query(
     k: int,
     T: int,
     use_kernels: bool = True,
+    fused: bool = False,
+    force: str | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """(c,k)-ANN for a batch of queries.
 
@@ -96,11 +98,26 @@ def ann_query(
       q: (B, d) query batch.
       k: results per query.
       T: candidate budget (βn + k) from `candidate_budget`.
+      use_kernels: route distance work through the kernel dispatch
+        policy (``repro.kernels.ops``) vs. forcing the jnp oracles.
+      fused: use the fused estimate→select→verify pipeline
+        (``repro.core.fused``): radius-threshold selection instead of
+        the O(n·T) top_k, gather-free verification instead of the
+        (B, T, d) candidate materialization.  Identical answers on
+        ties-free data.
+      force: explicit kernel dispatch mode ("pallas" | "interpret" |
+        "ref"); None derives it from ``use_kernels``.
 
     Returns:
       (indices (B, k) int32 into index.data, distances (B, k) float32).
     """
+    from repro.core.fused import fused_ann_query
     from repro.kernels import ops as kops
+
+    if force is None:
+        force = None if use_kernels else "ref"
+    if fused:
+        return fused_ann_query(index, q, k=k, T=T, force=force)
 
     q = jnp.asarray(q, jnp.float32)
     if q.ndim == 1:
@@ -108,26 +125,18 @@ def ann_query(
     qp = index.family.project(q)  # (B, m)
 
     # 1-2. estimate + select: projected distances, top-T smallest
-    if use_kernels:
-        d2p = kops.pairwise_sq_dist(qp, index.projected)  # (B, n)
-    else:
-        d2p = _sq_dist_ref(qp, index.projected)
-    neg, cand = jax.lax.top_k(-d2p, T)  # (B, T) candidate ids
+    d2p = kops.pairwise_sq_dist(qp, index.projected, force=force)  # (B, n)
+    _, cand = jax.lax.top_k(-d2p, T)  # (B, T) candidate ids
 
-    # 3. verify: exact distances on the candidate set
+    # 3. verify: exact distances on the candidate set, through the same
+    # kernel dispatch policy as the estimate (vmapped per-query rows)
     cpts = index.data[cand]  # (B, T, d)
-    d2 = jnp.sum((cpts - q[:, None, :]) ** 2, axis=-1)  # (B, T)
+    d2 = kops.pairwise_sq_dist(q, cpts, force=force)  # (B, T)
 
     # 4. answer
     negk, sel = jax.lax.top_k(-d2, k)
     idx = jnp.take_along_axis(cand, sel, axis=1)
-    return idx.astype(jnp.int32), jnp.sqrt(-negk)
-
-
-def _sq_dist_ref(q: jax.Array, x: jax.Array) -> jax.Array:
-    qn = jnp.sum(q * q, axis=-1, keepdims=True)
-    xn = jnp.sum(x * x, axis=-1)
-    return jnp.maximum(qn + xn[None, :] - 2.0 * (q @ x.T), 0.0)
+    return idx.astype(jnp.int32), jnp.sqrt(jnp.maximum(-negk, 0.0))
 
 
 def ann_search(
@@ -137,6 +146,7 @@ def ann_search(
     c: float = 1.5,
     params: PMLSHParams | None = None,
     use_kernels: bool = True,
+    fused: bool = False,
 ):
     """Convenience wrapper: pick T from the build-time parameter cache
     (re-solving Eq. 10 only when queried at a different ratio c)."""
@@ -146,4 +156,4 @@ def ann_search(
         else:
             params = solve_parameters(c, m=index.m)
     T = candidate_budget(params, index.n, k)
-    return ann_query(index, q, k=k, T=T, use_kernels=use_kernels)
+    return ann_query(index, q, k=k, T=T, use_kernels=use_kernels, fused=fused)

@@ -179,6 +179,14 @@ class PMTreeBackend(BaseIndex):
 class FlatBackend(BaseIndex):
     """Device-native dense pipeline (DESIGN.md §3), jit'd and batched.
 
+    Queries run the fused estimate→select→verify pipeline (DESIGN.md
+    §9: radius-threshold selection + gather-free verification) when the
+    index is large enough for the threshold passes to beat the sort
+    (default: n ≥ 8192, the measured CPU break-even);
+    ``options={"fused": True/False}`` pins either pipeline (identical
+    answers on ties-free data — the toggle is a perf knob, not a
+    semantics knob).
+
     With ``options={"quant": "sq8"|"pq", ...}`` the verify tier goes
     through quantized storage (DESIGN.md §8): a codec is trained at
     build time, every point is encoded, and queries rerank the T
@@ -199,6 +207,11 @@ class FlatBackend(BaseIndex):
         self.impl = build_flat_index(self.data, m=cfg.m, seed=cfg.seed,
                                      c=cfg.c)
         self.use_kernels = bool(cfg.options.get("use_kernels", True))
+        fused = cfg.options.get("fused")  # None → auto by index size
+        self.fused = None if fused is None else bool(fused)
+        # explicit kernel dispatch mode ("pallas"|"interpret"|"ref");
+        # None derives it from use_kernels (tests force "interpret")
+        self.force = cfg.options.get("force")
         self.codec = self.codes = None
         rerank = cfg.options.get("rerank")
         self.rerank = None if rerank is None else int(rerank)
@@ -223,9 +236,17 @@ class FlatBackend(BaseIndex):
     def _search(self, q: np.ndarray, k: int) -> SearchResult:
         T = candidate_budget(self.impl.params, self.n, k)
         B = q.shape[0]
+        # auto policy: the fused pipeline's O(n) threshold passes beat
+        # the O(n·T) sort once n is past the fixed-cost break-even; the
+        # fused verify kernel's answer network also caps k
+        fused = (self.fused if self.fused is not None
+                 else self.n >= 8192) and k <= 128
+        force = (self.force if self.force is not None
+                 else (None if self.use_kernels else "ref"))
         if self.codec is None:
             ids, dd = ann_query(self.impl, q, k=k, T=T,
-                                use_kernels=self.use_kernels)
+                                use_kernels=self.use_kernels, fused=fused,
+                                force=force)
             return SearchResult(
                 np.asarray(ids), np.asarray(dd),
                 stats=WorkStats(rounds=B, candidates_verified=B * T),
@@ -237,8 +258,7 @@ class FlatBackend(BaseIndex):
         R = min(max(rerank, k), T)
         ids, dd = quant_ann_query(
             self.impl, self.codec, self.codes, q, k=k, T=T, R=R,
-            store_raw=self.store_raw,
-            force=None if self.use_kernels else "ref",
+            store_raw=self.store_raw, force=force, fused=fused,
         )
         return SearchResult(
             np.asarray(ids), np.asarray(dd),

@@ -3,7 +3,13 @@
 kernels:
   pairwise_dist — candidate VERIFICATION: exact d-dim distances (MXU)
   project_dist  — fused ESTIMATE: x@A then ||·-q'||², projection stays in VMEM
-  topk          — streaming SELECT: running top-k across distance tiles
+  topk          — streaming answer top-k (selection network, k ≤ 128)
+  select        — radius-threshold SELECT: Eq. 9-seeded r·c^i ladder +
+                  bisection + tile-local cumsum compaction; handles the
+                  T = βn + k candidate budget without O(n·T) sort work
+  verify        — gather-free VERIFY: DMAs candidate rows HBM→VMEM
+                  tile-by-tile, exact distances + streaming top-k in
+                  VMEM; the (B,T,d) candidate tensor never exists
   adc           — quantized RERANK: asymmetric distances over codes via
                   per-query LUTs (one-hot MXU contraction)
 ops  — jit'd public wrappers (backend-aware dispatch)

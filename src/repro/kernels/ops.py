@@ -19,9 +19,12 @@ from . import ref
 from .adc import adc_dist_pallas
 from .pairwise_dist import pairwise_sq_dist_pallas
 from .project_dist import project_dist_pallas
+from .select import radius_select_pallas
 from .topk import topk_smallest_pallas
+from .verify import verify_topk_pallas
 
-__all__ = ["pairwise_sq_dist", "project_dist", "topk_smallest", "adc_dist"]
+__all__ = ["pairwise_sq_dist", "project_dist", "topk_smallest", "adc_dist",
+           "radius_select", "verify_topk"]
 
 
 def _mode(force: str | None) -> str:
@@ -32,11 +35,21 @@ def _mode(force: str | None) -> str:
 
 def pairwise_sq_dist(q: jax.Array, x: jax.Array, *, force: str | None = None,
                      **block_kw) -> jax.Array:
-    """(B,d) × (N,d) → (B,N) squared Euclidean distances (f32)."""
+    """(B,d) × (N,d) → (B,N) squared Euclidean distances (f32).
+
+    x may be per-query candidate rows (B, N, d) — the gathered VERIFY
+    form — in which case the kernel is vmapped over the batch.
+    """
     mode = _mode(force)
     if mode == "ref":
         return ref.pairwise_sq_dist(q, x)
-    return pairwise_sq_dist_pallas(q, x, interpret=(mode == "interpret"), **block_kw)
+    interpret = mode == "interpret"
+    if x.ndim == 3:
+        return jax.vmap(
+            lambda qb, xb: pairwise_sq_dist_pallas(
+                qb[None], xb, interpret=interpret, **block_kw)[0]
+        )(q, x)
+    return pairwise_sq_dist_pallas(q, x, interpret=interpret, **block_kw)
 
 
 def project_dist(x: jax.Array, a: jax.Array, qp: jax.Array, *,
@@ -69,8 +82,84 @@ def adc_dist(codes: jax.Array, lut: jax.Array, *, force: str | None = None,
 
 def topk_smallest(d: jax.Array, k: int, *, force: str | None = None,
                   **block_kw) -> tuple[jax.Array, jax.Array]:
-    """Row-wise k smallest (values, indices), ascending."""
+    """Row-wise k smallest (values, indices), ascending.
+
+    The streaming selection-network kernel is O(k²) and capped at
+    k ≤ 128; larger k transparently routes through the radius-threshold
+    selection path (``radius_select``), which has no such cap.
+    """
     mode = _mode(force)
     if mode == "ref":
         return ref.topk_smallest(d, k)
+    if k > 128:
+        return radius_select(d, k, force=force, **block_kw)
     return topk_smallest_pallas(d, k, interpret=(mode == "interpret"), **block_kw)
+
+
+def default_select_seed(d: jax.Array, T: int, *, stride: int = 8) -> jax.Array:
+    """Per-row seed for radius selection from a strided sample of d:
+    the sample mean scaled by the target fraction T/N — within the
+    rung ladder's reach of the T-th smallest for any unimodal row."""
+    samp = d[:, ::stride]
+    N = d.shape[1]
+    return jnp.mean(samp, axis=1) * jnp.float32(max(T / N, 1e-3))
+
+
+def radius_select(d: jax.Array, T: int, *, tau0: jax.Array | None = None,
+                  T_pad: int | None = None, force: str | None = None,
+                  **block_kw) -> tuple[jax.Array, jax.Array]:
+    """Row-wise T smallest (values, indices) by radius thresholding.
+
+    Same contract as :func:`topk_smallest` (ascending, lowest-index
+    tie-break) for any T, but O(n) threshold passes + one O(T_pad·T)
+    finishing sort instead of an O(n·T) selection — the SELECT step for
+    candidate budgets in the thousands.  ``tau0`` (B,) optionally seeds
+    the threshold ladder (e.g. the Eq. 9 estimate from
+    ``repro.core.fused``); default is a sample-mean seed.
+
+    Exactness matches top_k unconditionally: a tie cluster wider than
+    the survivor buffer (see select.py) is detected from the kernel's
+    per-row survivor counts and rerouted to the exact sort, so the
+    radius path can only ever be a perf win, never a recall loss.
+    Degenerate budgets (T_pad ≥ N) fall back to the sort directly.
+    """
+    mode = _mode(force)
+    B, N = d.shape
+    if T_pad is None:
+        T_pad = T + max(256, T // 8)
+    T_pad = min(max(T_pad, T), N)
+    if mode == "ref":
+        return ref.radius_select(d, T, T_pad=T_pad)
+    if T_pad >= N:  # nothing to skip — the plain sort is cheaper
+        return ref.topk_smallest(d, T)
+    if tau0 is None:
+        tau0 = default_select_seed(d, T)
+    vals_p, idx_p, cnt = radius_select_pallas(
+        d, tau0, T, T_pad=T_pad, interpret=(mode == "interpret"), **block_kw)
+
+    def _trim():
+        neg, pos = jax.lax.top_k(-vals_p, T)
+        return -neg, jnp.take_along_axis(idx_p, pos, axis=1)
+
+    # buffer overflow (pathological tie cluster at the threshold) drops
+    # survivors in index order — arbitrarily wrong ones — so reroute to
+    # the exact sort rather than return a degraded candidate set
+    return jax.lax.cond(jnp.any(cnt > T_pad),
+                        lambda: ref.topk_smallest(d, T), _trim)
+
+
+def verify_topk(data: jax.Array, q: jax.Array, cand: jax.Array, k: int, *,
+                force: str | None = None, **block_kw
+                ) -> tuple[jax.Array, jax.Array]:
+    """Fused VERIFY: exact distances on candidate ids + top-k answer.
+
+    data (n,d) × q (B,d) × cand (B,Tc) → (d² (B,k) ascending, ids (B,k)).
+    The kernel gathers candidate rows HBM→VMEM tile-by-tile and never
+    materializes the (B,Tc,d) tensor; the ref oracle (and the k > 128
+    regime, where the in-VMEM selection network does not apply) does.
+    """
+    mode = _mode(force)
+    if mode == "ref" or k > 128:
+        return ref.verify_topk(data, q, cand, k)
+    return verify_topk_pallas(data, q, cand, k,
+                              interpret=(mode == "interpret"), **block_kw)

@@ -8,17 +8,26 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["pairwise_sq_dist", "project_dist", "topk_smallest", "adc_dist"]
+__all__ = ["pairwise_sq_dist", "project_dist", "topk_smallest", "adc_dist",
+           "radius_select", "verify_topk"]
 
 
 def pairwise_sq_dist(q: jax.Array, x: jax.Array) -> jax.Array:
     """Squared Euclidean distances between rows of q (B,d) and x (N,d).
 
+    x may also be per-query candidate rows (B, N, d) — the VERIFY step's
+    gathered form — giving out[b, i] = ||q[b] - x[b, i]||².
     Returns (B, N) float32, clamped at 0 (guards fp cancellation).
     """
     q = jnp.asarray(q, jnp.float32)
     x = jnp.asarray(x, jnp.float32)
+    if x.ndim == 3:
+        # gathered verify rows are already materialized per query, so
+        # the direct difference form costs nothing extra and avoids the
+        # norm trick's catastrophic cancellation on near-duplicates
+        return jnp.sum((x - q[:, None, :]) ** 2, axis=-1)
     qn = jnp.sum(q * q, axis=-1, keepdims=True)  # (B, 1)
     xn = jnp.sum(x * x, axis=-1)  # (N,)
     d2 = qn + xn[None, :] - 2.0 * (q @ x.T)
@@ -64,3 +73,97 @@ def topk_smallest(d: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
     """
     neg, idx = jax.lax.top_k(-jnp.asarray(d, jnp.float32), k)
     return -neg, idx.astype(jnp.int32)
+
+
+def _bisect_threshold(d: jax.Array, target, iters: int) -> jax.Array:
+    """Per-row τ with count(d ≤ τ) ≥ target, shrunk toward the target-th
+    smallest value by ``iters`` bisection steps on the [0, max] bracket."""
+    lo = jnp.zeros((d.shape[0], 1), jnp.float32)
+    hi = jnp.max(d, axis=1, keepdims=True)
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        ge = jnp.sum((d <= mid).astype(jnp.int32), axis=1,
+                     keepdims=True) >= target
+        hi = jnp.where(ge, mid, hi)
+        lo = jnp.where(ge, lo, mid)
+    return hi
+
+
+def radius_select(d: jax.Array, T: int, *, T_pad: int | None = None,
+                  sample_stride: int = 8) -> tuple[jax.Array, jax.Array]:
+    """T smallest per row of d (B, N) by RADIUS, not rank — the jnp
+    oracle of the ``select.py`` kernel and the fast non-TPU SELECT path.
+
+    Same contract as :func:`topk_smallest` (ascending values, int32
+    indices, lowest-index tie-break), reached without the O(N·T) sort:
+    a bisection on a strided sample estimates the T-th smallest value,
+    one full counting pass validates the threshold (falling back to
+    full-row bisection when the sample misleads), survivors are
+    compacted by cumsum + searchsorted GATHER into T_pad ≈ 1.1·T slots,
+    and one small top_k over those columns finishes exactly.
+
+    Exact for ANY input: a tie cluster wider than T_pad − T straddling
+    the T-th smallest value cannot fit the compaction buffer, so that
+    (pathological, never-on-continuous-distances) case is detected from
+    the survivor count and rerouted to the plain sort.
+    """
+    d = jnp.asarray(d, jnp.float32)
+    B, N = d.shape
+    assert 1 <= T <= N, f"T={T} out of range for N={N}"
+    if T_pad is None:
+        T_pad = T + max(256, T // 8)
+    T_pad = min(max(T_pad, T), N)
+    if T_pad >= N:  # degenerate budget: nothing to skip, sort it all
+        return topk_smallest(d, T)
+
+    samp = d[:, ::sample_stride]
+    s = samp.shape[1]
+    # aim the sample quantile a few σ above T/N so the full-row count
+    # lands in [T, T_pad] with overwhelming probability
+    margin = 4.0 * float(np.sqrt(T * max(1.0 - T / N, 1e-9))) / N
+    t_s = min(int(np.ceil((T / N + margin) * s)) + 2, s)
+    hi = _bisect_threshold(samp, t_s, iters=18)
+    cnt = jnp.sum((d <= hi).astype(jnp.int32), axis=1, keepdims=True)
+    ok = jnp.all((cnt >= T) & (cnt <= T_pad))
+    hi = jax.lax.cond(ok, lambda: hi, lambda: _bisect_threshold(d, T, 22))
+
+    def _compact():
+        mask = d <= hi
+        cs = jnp.cumsum(mask.astype(jnp.int32), axis=1)  # survivor ranks
+        ranks = jnp.arange(1, T_pad + 1, dtype=jnp.int32)
+        g = jax.vmap(lambda c: jnp.searchsorted(c, ranks, side="left"))(cs)
+        valid = g < N
+        gc = jnp.minimum(g, N - 1)
+        vals = jnp.where(valid, jnp.take_along_axis(d, gc, axis=1), jnp.inf)
+        idxs = jnp.where(valid, gc, -1).astype(jnp.int32)
+        neg, pos = jax.lax.top_k(-vals, T)
+        return -neg, jnp.take_along_axis(idxs, pos, axis=1)
+
+    # even the full-row bisection cannot squeeze a tie cluster at the
+    # threshold below T_pad survivors; dropping any of them would lose
+    # true top-T members, so that case takes the exact sort instead
+    cnt_hi = jnp.sum((d <= hi).astype(jnp.int32), axis=1)
+    return jax.lax.cond(jnp.any(cnt_hi > T_pad),
+                        lambda: topk_smallest(d, T), _compact)
+
+
+def verify_topk(data: jax.Array, q: jax.Array, cand: jax.Array, k: int
+                ) -> tuple[jax.Array, jax.Array]:
+    """Exact-verify candidates and answer — oracle of ``verify.py``.
+
+    data (n, d) × q (B, d) × cand (B, Tc) int32 ids (-1 = padding) →
+    (d² (B, k) ascending, ids (B, k)); slots beyond a row's real
+    candidates are (+inf, -1).  The oracle materializes the gathered
+    (B, Tc, d) candidate tensor the kernel exists to avoid.
+    """
+    cand = jnp.asarray(cand, jnp.int32)
+    cpts = jnp.asarray(data, jnp.float32)[jnp.maximum(cand, 0)]  # (B, Tc, d)
+    d2 = pairwise_sq_dist(q, cpts)  # (B, Tc)
+    d2 = jnp.where(cand < 0, jnp.inf, d2)
+    if k > cand.shape[1]:  # short candidate rows: keep the (B, k) contract
+        pad = k - cand.shape[1]
+        d2 = jnp.pad(d2, ((0, 0), (0, pad)), constant_values=jnp.inf)
+        cand = jnp.pad(cand, ((0, 0), (0, pad)), constant_values=-1)
+    neg, sel = jax.lax.top_k(-d2, k)
+    idx = jnp.take_along_axis(cand, sel, axis=1)
+    return -neg, jnp.where(jnp.isinf(-neg), -1, idx).astype(jnp.int32)

@@ -1,0 +1,259 @@
+"""Pallas TPU kernel: radius-threshold candidate selection.
+
+The PM-LSH SELECT step wants the T = βn + k projected-nearest points.
+``topk.py`` streams a selection network that is O(k²) per tile — great
+for the final answer (k ≤ 128), hopeless for the candidate budget
+(T in the thousands).  ``lax.top_k`` handles any T but pays O(n·T)
+sort work and materializes ordering state for the full row.
+
+This kernel exploits what the paper already gives us: the tunable
+confidence interval (Lemma 3 / Eq. 9) turns the rank T into a RADIUS —
+the T-th smallest projected distance is within a few of the paper's
+``r·c^i`` range-query rungs of the Lemma-2 seed estimate.  Selection
+then needs no sort at all, only branch-free O(n) threshold passes:
+
+  phase 0        one pass counts survivors of L ladder rungs
+                 τ0·c^{2(i−L0)} simultaneously (the paper's radius
+                 doubling schedule, squared space) and brackets the
+                 T-th smallest value between two rungs;
+  phases 1..I    bisection passes shrink the bracket: count(d ≤ mid)
+                 vs T keeps the invariant count(lo) < T ≤ count(hi);
+  final phase    one pass compacts survivors (d ≤ hi) into a dense
+                 (B, T_pad) buffer: tile-local cumsum ranks each tile's
+                 survivors, a one-hot MXU contraction packs them to the
+                 tile front, and an SMEM write cursor per row appends
+                 the packed run at the row's next free slot.
+
+The caller finishes with one top_k over the T_pad ≈ 1.1·T compacted
+columns (``ops.radius_select``), so total ordering work drops from
+O(n·T) to O(T_pad·T) while the threshold passes stay O(n) stream reads.
+
+Exactness: the bracket invariant guarantees every true top-T element
+survives the threshold, and compaction preserves ascending-index order,
+so the finishing top_k reproduces ``lax.top_k`` exactly — including its
+lowest-index tie-break — whenever the survivor count fits T_pad.  A
+pathological tie cluster (> T_pad − T equal values straddling the T-th
+smallest) overflows the buffer, and overflow truncates in INDEX order —
+the dropped high-index survivors may be strictly nearer than kept ones,
+so an overflowed buffer is NOT a valid candidate set.  The kernel
+therefore returns the exact per-row survivor counts and the dispatch
+wrapper (``ops.radius_select``) reroutes any overflowed batch to the
+exact sort, keeping parity unconditional.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["radius_select_kernel", "radius_select_pallas"]
+
+
+def radius_select_kernel(
+    tau0_ref, d_ref, ov_ref, oi_ref, oc_ref,
+    cnt_ref, lad_ref, lo_ref, hi_ref, dmax_ref, offs_ref, tot_ref,
+    *, T: int, T_pad: int, block_n: int, L: int, L0: int, c2: float,
+    iters: int, n_tiles: int, Bh: int,
+):
+    p = pl.program_id(0)  # phase: 0 ladder, 1..iters bisect, last compact
+    j = pl.program_id(1)  # tile along n
+    last = n_tiles - 1
+    d = d_ref[...]  # (Bh, bN), padding carries +inf
+    real = d < jnp.inf
+
+    @pl.when((p == 0) & (j == 0))
+    def _init():
+        ov_ref[...] = jnp.full_like(ov_ref, jnp.inf)
+        oi_ref[...] = jnp.full_like(oi_ref, -1)
+        oc_ref[...] = jnp.zeros_like(oc_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        lad_ref[...] = jnp.zeros_like(lad_ref)
+        dmax_ref[...] = jnp.zeros_like(dmax_ref)
+
+    # -- phase 0: count all L ladder rungs in one data pass ---------------
+    @pl.when(p == 0)
+    def _ladder():
+        tau0 = tau0_ref[:, :1]  # (Bh, 1) per-row Eq. 9 seed, squared units
+        cols = [
+            jnp.sum((d <= tau0 * (c2 ** (l - L0))) & real, axis=1,
+                    keepdims=True).astype(jnp.float32)
+            for l in range(L)
+        ]
+        tile_cnt = jnp.concatenate(cols, axis=1)  # (Bh, L): rung l in col l
+        lad_ref[...] += jnp.concatenate(
+            [tile_cnt, jnp.zeros((Bh, 128 - L), jnp.float32)], axis=1)
+        dmax_ref[...] = jnp.maximum(
+            dmax_ref[...],
+            jnp.max(jnp.where(real, d, -jnp.inf), axis=1, keepdims=True))
+
+        @pl.when(j == last)
+        def _bracket():
+            cnts = lad_ref[:, :L]
+            ge = cnts >= T
+            any_ge = jnp.any(ge, axis=1, keepdims=True)
+            first = jnp.argmax(ge, axis=1)[:, None].astype(jnp.float32)
+            dmax = dmax_ref[:, :1]
+            # smallest rung holding >= T survivors; the data max rescues
+            # a seed so low the whole ladder undershoots
+            hi = jnp.where(any_ge, tau0 * c2 ** (first - L0), dmax)
+            hi = jnp.minimum(hi, dmax)  # and one so high rung 0 overshoots
+            lo = jnp.where(any_ge & (first > 0),
+                           tau0 * c2 ** (first - 1.0 - L0), 0.0)
+            lo = jnp.where(any_ge, lo, tau0 * c2 ** (L - 1.0 - L0))
+            lo = jnp.minimum(lo, hi)
+            hi_ref[...] = jnp.broadcast_to(hi, hi_ref.shape)
+            lo_ref[...] = jnp.broadcast_to(lo, lo_ref.shape)
+            cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    # -- phases 1..iters: one bisection step per data pass ----------------
+    @pl.when((p >= 1) & (p <= iters))
+    def _bisect():
+        mid = 0.5 * (lo_ref[:, :1] + hi_ref[:, :1])
+        cnt_ref[...] += jnp.broadcast_to(
+            jnp.sum((d <= mid) & real, axis=1,
+                    keepdims=True).astype(jnp.float32), cnt_ref.shape)
+
+        @pl.when(j == last)
+        def _update():
+            ge = cnt_ref[:, :1] >= T
+            hi_ref[...] = jnp.where(ge, jnp.broadcast_to(mid, hi_ref.shape),
+                                    hi_ref[...])
+            lo_ref[...] = jnp.where(ge, lo_ref[...],
+                                    jnp.broadcast_to(mid, lo_ref.shape))
+            cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    # -- final phase: compact survivors (d <= hi) into (Bh, T_pad) --------
+    @pl.when(p == iters + 1)
+    def _compact():
+        @pl.when(j == 0)
+        def _zero():
+            for b in range(Bh):
+                offs_ref[b] = 0
+                tot_ref[b] = 0
+
+        mask = (d <= hi_ref[:, :1]) & real
+        pos = jnp.cumsum(mask.astype(jnp.int32), axis=1) - 1  # tile-local rank
+        cnt_tile = pos[:, -1] + 1  # (Bh,) survivors in this tile
+        gidx = (j * block_n
+                + jax.lax.broadcasted_iota(jnp.int32, (Bh, block_n), 1)
+                ).astype(jnp.float32)
+        # pack survivors to the tile front: one-hot (src → rank) matmul
+        # carries values and indices together on the MXU
+        dst = jax.lax.broadcasted_iota(jnp.int32, (Bh, block_n, block_n), 2)
+        onehot = (mask[:, :, None] & (pos[:, :, None] == dst)
+                  ).astype(jnp.float32)  # (Bh, src, dst)
+        packed = jnp.stack([jnp.where(mask, d, 0.0), gidx], axis=1)
+        comp = jax.lax.dot_general(
+            packed, onehot, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)  # (Bh, 2, bN)
+        lane = jax.lax.broadcasted_iota(jnp.int32, (Bh, block_n), 1)
+        keep = lane < cnt_tile[:, None]
+        cvals = jnp.where(keep, comp[:, 0, :], jnp.inf)
+        cidx = jnp.where(keep, comp[:, 1, :].astype(jnp.int32), -1)
+        for b in range(Bh):
+            off = jnp.minimum(offs_ref[b], T_pad)  # overflow clamps in-bounds
+            ov_ref[b, pl.ds(off, block_n)] = cvals[b]
+            oi_ref[b, pl.ds(off, block_n)] = cidx[b]
+            offs_ref[b] = off + cnt_tile[b]
+            tot_ref[b] = tot_ref[b] + cnt_tile[b]
+
+        @pl.when(j == last)
+        def _emit():
+            counts = jnp.stack([tot_ref[b] for b in range(Bh)])[:, None]
+            oc_ref[...] = jnp.broadcast_to(counts, oc_ref.shape)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("T", "T_pad", "block_n", "ladder", "iters", "c2",
+                     "interpret"),
+)
+def radius_select_pallas(
+    d: jax.Array,
+    tau0: jax.Array,
+    T: int,
+    *,
+    T_pad: int,
+    block_n: int = 128,
+    ladder: int = 16,
+    iters: int = 14,
+    c2: float = 2.25,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Compact the T smallest of each row of d (B, N) into T_pad slots.
+
+    Args:
+      d: (B, N) float32 distances (non-negative; +inf allowed as padding).
+      tau0: (B,) per-row threshold seed in d's (squared) units — e.g. the
+        Eq. 9 / Lemma 2 estimate of the T-th projected distance.  The
+        rung ladder spans tau0·c2^±(ladder/2), so any seed within a few
+        orders of magnitude works; a hopeless seed falls back to the
+        observed [0, max(d)] bracket.
+      T: selection rank (the guarantee target).
+      T_pad: compaction buffer width, ≥ T; slack absorbs the unresolved
+        bisection window and boundary ties.
+      ladder / iters / c2: rung count, bisection passes, squared radius
+        growth factor (c² in the paper's r·c^i schedule).
+
+    Returns (vals (B, T_pad), idx (B, T_pad), count (B,)): survivors in
+    ascending-INDEX order, padded with +inf / -1; count is the exact
+    per-row survivor total.  count ≤ T_pad: the T smallest are all in
+    the buffer — finish with a top_k over the T_pad columns
+    (``ops.radius_select`` does).  count > T_pad: the buffer
+    OVERFLOWED and was truncated in index order, so it may have lost
+    true top-T members — callers MUST discard it and fall back to an
+    exact selection (the dispatch wrapper does; see module doc).
+    """
+    B, N = d.shape
+    assert 1 <= T <= N, f"T={T} out of range for N={N}"
+    assert T_pad >= T, f"T_pad={T_pad} < T={T}"
+    L = min(ladder, 128)
+    bN = min(block_n, _ceil_mult(N, 128))
+    Bh = _ceil_mult(B, 8)
+    Np = _ceil_mult(N, bN)
+    dp = jnp.full((Bh, Np), jnp.inf, jnp.float32).at[:B, :N].set(d)
+    t0 = jnp.zeros((Bh, 128), jnp.float32).at[:B, :].set(
+        jnp.broadcast_to(
+            jnp.maximum(jnp.asarray(tau0, jnp.float32), 1e-30)[:, None],
+            (B, 128)))
+    n_tiles = Np // bN
+    T_out = T_pad + bN  # margin so the last window write stays in-bounds
+    kern = functools.partial(
+        radius_select_kernel, T=T, T_pad=T_pad, block_n=bN, L=L, L0=L // 2,
+        c2=c2, iters=iters, n_tiles=n_tiles, Bh=Bh)
+    vals, idx, cnt = pl.pallas_call(
+        kern,
+        grid=(iters + 2, n_tiles),
+        in_specs=[
+            pl.BlockSpec((Bh, 128), lambda p, j: (0, 0)),
+            pl.BlockSpec((Bh, bN), lambda p, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((Bh, T_out), lambda p, j: (0, 0)),
+            pl.BlockSpec((Bh, T_out), lambda p, j: (0, 0)),
+            pl.BlockSpec((Bh, 128), lambda p, j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bh, T_out), jnp.float32),
+            jax.ShapeDtypeStruct((Bh, T_out), jnp.int32),
+            jax.ShapeDtypeStruct((Bh, 128), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((Bh, 128), jnp.float32),  # bisection count
+            pltpu.VMEM((Bh, 128), jnp.float32),  # ladder counts (col l)
+            pltpu.VMEM((Bh, 128), jnp.float32),  # bracket lo
+            pltpu.VMEM((Bh, 128), jnp.float32),  # bracket hi
+            pltpu.VMEM((Bh, 128), jnp.float32),  # running data max
+            pltpu.SMEM((Bh,), jnp.int32),        # per-row write cursor
+            pltpu.SMEM((Bh,), jnp.int32),        # per-row survivor total
+        ],
+        interpret=interpret,
+    )(t0, dp)
+    return vals[:B, :T_pad], idx[:B, :T_pad], cnt[:B, 0]
+
+
+def _ceil_mult(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m

@@ -71,9 +71,22 @@ def topk_kernel(d_ref, ov_ref, oi_ref, accv_ref, acci_ref, *, k: int, block_n: i
 def topk_smallest_pallas(
     d: jax.Array, k: int, *, block_n: int = 512, interpret: bool = False
 ) -> tuple[jax.Array, jax.Array]:
-    """Row-wise k smallest of d (B, N), ascending. Returns (values, idx)."""
+    """Row-wise k smallest of d (B, N), ascending. Returns (values, idx).
+
+    k is capped at 128: the merge is a masked-argmin selection network,
+    O(k²) compares per tile, which stops being "noise next to the MXU"
+    right around the VPU lane width.  Selection at candidate-budget
+    scale (T = βn + k in the thousands) belongs to the radius-threshold
+    kernel in ``select.py``; ``ops.topk_smallest`` routes k > 128 there
+    automatically.
+    """
     B, N = d.shape
     assert k <= N, f"k={k} > N={N}"
+    if k > 128:
+        raise ValueError(
+            f"topk_smallest_pallas: k={k} > 128 — the O(k²) selection "
+            "network does not scale past the VPU lane width; use "
+            "ops.topk_smallest (auto-fallback) or ops.radius_select")
     bN = min(block_n, _ceil_mult(N, 128))
     Bh = _ceil_mult(B, 8)
     Np = _ceil_mult(N, bN)

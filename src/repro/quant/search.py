@@ -29,7 +29,8 @@ from .codec import Codec
 __all__ = ["quant_ann_query"]
 
 
-@partial(jax.jit, static_argnames=("k", "T", "R", "store_raw", "force"))
+@partial(jax.jit,
+         static_argnames=("k", "T", "R", "store_raw", "force", "fused"))
 def quant_ann_query(
     index: FlatIndex,
     codec: Codec,
@@ -41,6 +42,7 @@ def quant_ann_query(
     R: int,
     store_raw: bool = True,
     force: str | None = None,
+    fused: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """(c,k)-ANN over quantized storage.
 
@@ -53,6 +55,11 @@ def quant_ann_query(
       k / T / R: answer size, candidate budget (βn + k), rerank budget.
       store_raw: verify the final R candidates against float vectors
         (exact distances) vs. answer straight from ADC estimates.
+      fused: use the fused pipeline (DESIGN.md §9): radius-threshold
+        SELECT for both the T-budget and the R-rerank cut, and the
+        gather-free VERIFY kernel for the exact tier — the ADC rerank
+        slots in unchanged as the verify stage on codes.  Identical
+        answers on ties-free data.
 
     Returns (indices (B, k) int32, distances (B, k) float32).
     """
@@ -66,7 +73,14 @@ def quant_ann_query(
 
     # 1-2. estimate + select (identical to the float pipeline)
     d2p = kops.pairwise_sq_dist(qp, index.projected, force=force)  # (B, n)
-    _, cand = jax.lax.top_k(-d2p, T)  # (B, T)
+    if fused:
+        from repro.core.fused import select_seed
+
+        m = index.params.m if index.params is not None else index.m
+        tau0 = select_seed(d2p, T, m)
+        _, cand = kops.radius_select(d2p, T, tau0=tau0, force=force)
+    else:
+        _, cand = jax.lax.top_k(-d2p, T)  # (B, T)
 
     # 3. rerank: ADC on the candidates' codes, keep the R best.
     # gather BEFORE widening: only B·T code rows are ever touched at
@@ -78,18 +92,26 @@ def quant_ann_query(
     else:
         lut = codec.lookup_tables(q)  # (B, S, V)
         d2a = kops.adc_dist(ccodes, lut, force=force)  # (B, T)
-    negR, selR = jax.lax.top_k(-d2a, R)
+    if fused and R > 128:
+        adcR, selR = kops.radius_select(d2a, R, force=force)
+        negR = -adcR
+    else:
+        negR, selR = jax.lax.top_k(-d2a, R)
     rcand = jnp.take_along_axis(cand, selR, axis=1)  # (B, R)
 
     if not store_raw:
-        # codes-only: top_k output is already ascending in ADC distance
+        # codes-only: the R-selection is already ascending in ADC distance
         idx = rcand[:, :k]
         dd = jnp.sqrt(jnp.maximum(-negR[:, :k], 0.0))
         return idx.astype(jnp.int32), dd
 
-    # 4. verify: exact distances on the R survivors
+    # 4. verify: exact distances on the R survivors, through the kernel
+    # dispatch policy (force= now reaches the verify tier too)
+    if fused:
+        d2, idx = kops.verify_topk(index.data, q, rcand, k, force=force)
+        return idx.astype(jnp.int32), jnp.sqrt(jnp.maximum(d2, 0.0))
     cpts = index.data[rcand]  # (B, R, d)
-    d2 = jnp.sum((cpts - q[:, None, :]) ** 2, axis=-1)  # (B, R)
+    d2 = kops.pairwise_sq_dist(q, cpts, force=force)  # (B, R)
     negk, sel = jax.lax.top_k(-d2, k)
     idx = jnp.take_along_axis(rcand, sel, axis=1)
     return idx.astype(jnp.int32), jnp.sqrt(jnp.maximum(-negk, 0.0))

@@ -45,6 +45,13 @@ class RetrievalStep:
     which are append-order and never recycled, so the value store is a
     plain append-only array.
 
+    Device-backed datastores (``flat``, ``flat-pq``, streaming with
+    flat segments) serve lookups through the fused
+    estimate→select→verify pipeline (DESIGN.md §9) by default —
+    radius-threshold candidate selection plus gather-free verification
+    — so the per-token retrieval step never materializes the (B, T, d)
+    candidate tensor; ``options={"fused": False}`` opts a datastore out.
+
     Quantized datastores: pass the quant options through
     ``index_config`` (e.g. ``IndexConfig(backend="flat-pq")`` or
     ``options={"quant": "sq8", "store_raw": False}``) and the KEY side

@@ -29,7 +29,12 @@ options: ``delta_threshold`` (flush trigger, default 512),
 ``segment_backend`` (default "pmtree"; "flat" when ``quant`` is set),
 ``max_segments`` (compaction trigger, default 4), ``max_dead_fraction``
 (segment rot trigger, default 0.5), ``use_kernels`` (delta-scan
-dispatch, default True).
+dispatch, default True).  Unrecognized options (e.g. ``fused``,
+``quant``, ``rerank``) pass through to the segment backend, so the
+per-segment fan-out of a ``"flat"``/``"flat-pq"``-segmented index runs
+the fused estimate→select→verify pipeline (DESIGN.md §9) — by size
+auto-policy on big compacted segments, or pinned via
+``options={"fused": True}``.
 
 Quantized segments: with ``options={"quant": "sq8"|"pq", ...}`` sealed
 segments are served by the quantized flat backend (DESIGN.md §8) —

@@ -1,0 +1,325 @@
+"""Fused pipeline acceptance: exact parity with the unfused path.
+
+The fused estimate→select→verify pipeline (DESIGN.md §9) is a perf
+rewiring, not a semantics change: on ties-free data it must return
+IDENTICAL (indices, distances) to the unfused top_k-and-gather path,
+for every backend that routes through it — flat, flat-pq, and the
+streaming index's per-segment fan-out — in interpret mode (the
+bit-accurate kernel execution) as well as the jnp ref path.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flat_index import (
+    ann_query,
+    build_flat_index,
+    candidate_budget,
+)
+from repro.index import IndexConfig, build_index
+from repro.kernels import ops, ref
+from repro.kernels.select import radius_select_pallas
+from repro.kernels.topk import topk_smallest_pallas
+from repro.kernels.verify import verify_topk_pallas
+
+N, D = 400, 24
+
+
+@pytest.fixture(scope="module")
+def data():
+    return np.random.default_rng(0).normal(size=(N, D)).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def queries(data):
+    rng = np.random.default_rng(1)
+    return (data[rng.integers(0, N, size=8)]
+            + 0.05 * rng.normal(size=(8, D))).astype(np.float32)
+
+
+def _pair(backend, data, opts, force):
+    """(fused, unfused) indexes over identical build options."""
+    a = build_index(data, IndexConfig(
+        backend=backend, options={**opts, "fused": True, "force": force}))
+    b = build_index(data, IndexConfig(
+        backend=backend, options={**opts, "fused": False, "force": force}))
+    return a, b
+
+
+BACKENDS = [
+    ("flat", {}),
+    ("flat-pq", {}),
+    ("streaming", {"segment_backend": "flat", "delta_threshold": 64}),
+]
+
+
+class TestBackendParity:
+    @pytest.mark.parametrize("B", [1, 7])
+    @pytest.mark.parametrize("k", [1, 10])
+    @pytest.mark.parametrize("backend,opts", BACKENDS)
+    def test_interpret_parity(self, backend, opts, B, k, data, queries):
+        fused, unfused = _pair(backend, data, opts, "interpret")
+        q = queries[:B]
+        ra, rb = fused.search(q, k), unfused.search(q, k)
+        np.testing.assert_array_equal(ra.indices, rb.indices)
+        # indices are exact; distances agree to kernel reduction-order
+        # noise (the two verify kernels pad/accumulate differently)
+        np.testing.assert_allclose(ra.distances, rb.distances,
+                                   rtol=1e-3, atol=1e-4)
+
+    @pytest.mark.parametrize("backend,opts", BACKENDS)
+    def test_ref_parity(self, backend, opts, data, queries):
+        fused, unfused = _pair(backend, data, opts, "ref")
+        ra, rb = fused.search(queries, 10), unfused.search(queries, 10)
+        np.testing.assert_array_equal(ra.indices, rb.indices)
+        np.testing.assert_allclose(ra.distances, rb.distances,
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_streaming_parity_survives_mutation(self, data, queries):
+        """Parity must hold across flush/delete/compaction — i.e. on
+        the true per-segment fan-out, not just one sealed segment."""
+        opts = {"segment_backend": "flat", "delta_threshold": 50,
+                "max_segments": 3}
+        fused, unfused = _pair("streaming", data[:100], opts, "ref")
+        rng = np.random.default_rng(2)
+        extra = rng.normal(size=(170, D)).astype(np.float32)
+        for ix in (fused, unfused):
+            ids = ix.insert(extra)
+            ix.delete(ids[::5])
+            ix.flush()
+        assert fused.segment_count > 1
+        ra, rb = fused.search(queries, 10), unfused.search(queries, 10)
+        np.testing.assert_array_equal(ra.indices, rb.indices)
+
+
+class TestFunctionLevel:
+    @pytest.mark.parametrize("force", ["ref", "interpret"])
+    @pytest.mark.parametrize("B,k", [(1, 1), (7, 10)])
+    def test_ann_query_parity(self, data, queries, B, k, force):
+        idx = build_flat_index(data, m=15)
+        T = candidate_budget(idx.params, N, k)
+        i0, d0 = ann_query(idx, queries[:B], k=k, T=T, fused=False,
+                           force=force)
+        i1, d1 = ann_query(idx, queries[:B], k=k, T=T, fused=True,
+                           force=force)
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+        np.testing.assert_allclose(d0, d1, rtol=1e-3, atol=1e-4)
+
+    def test_fused_ann_query_exported(self, data, queries):
+        from repro.core import fused_ann_query
+
+        idx = build_flat_index(data, m=15)
+        i1, d1 = fused_ann_query(idx, queries, k=5, T=60, force="ref")
+        assert i1.shape == (8, 5) and d1.shape == (8, 5)
+        i0, _ = ann_query(idx, queries, k=5, T=60, fused=False, force="ref")
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+
+
+class TestBudgetEdges:
+    """T = n, k = n and k > n regression edges for the select path."""
+
+    def test_full_budget_T_equals_n(self, data, queries):
+        idx = build_flat_index(data, m=15)
+        i0, d0 = ann_query(idx, queries, k=10, T=N, fused=False, force="ref")
+        i1, d1 = ann_query(idx, queries, k=10, T=N, fused=True, force="ref")
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+        np.testing.assert_allclose(d0, d1, rtol=1e-6)
+
+    def test_k_equals_n(self):
+        rng = np.random.default_rng(4)
+        small = rng.normal(size=(60, 8)).astype(np.float32)
+        q = rng.normal(size=(3, 8)).astype(np.float32)
+        fused, unfused = _pair("flat", small, {}, "ref")
+        ra, rb = fused.search(q, 60), unfused.search(q, 60)
+        np.testing.assert_array_equal(ra.indices, rb.indices)
+        # every point answered exactly once
+        for row in np.asarray(ra.indices):
+            assert sorted(row.tolist()) == list(range(60))
+
+    def test_k_greater_than_n_pads(self):
+        rng = np.random.default_rng(5)
+        small = rng.normal(size=(20, 8)).astype(np.float32)
+        q = rng.normal(size=(2, 8)).astype(np.float32)
+        fused, unfused = _pair("flat", small, {}, "ref")
+        ra, rb = fused.search(q, 32), unfused.search(q, 32)
+        np.testing.assert_array_equal(ra.indices, rb.indices)
+        assert (ra.indices[:, 20:] == -1).all()
+        assert np.isinf(ra.distances[:, 20:]).all()
+
+    def test_quant_store_raw_false_parity(self, data, queries):
+        opts = {"quant": "sq8", "store_raw": False}
+        fused, unfused = _pair("flat", data, opts, "ref")
+        ra, rb = fused.search(queries, 10), unfused.search(queries, 10)
+        np.testing.assert_array_equal(ra.indices, rb.indices)
+
+
+# ---------------------------------------------------------------------------
+# kernel-level suites (here rather than test_kernels.py so they run
+# without hypothesis; only the @given sweep lives there)
+# ---------------------------------------------------------------------------
+
+
+class TestRadiusSelect:
+    """Radius-threshold selection kernel vs the top-k contract."""
+
+    def _finish(self, d, T, **kw):
+        """Kernel output + the finishing top_k (what ops.radius_select
+        does) — exposed raw here to also check counts."""
+        tau0 = jnp.mean(d, axis=1) * max(T / d.shape[1], 1e-3)
+        vp, ip, cnt = radius_select_pallas(
+            d, tau0, T, interpret=True, **kw)
+        neg, pos = jax.lax.top_k(-vp, T)
+        return -neg, jnp.take_along_axis(ip, pos, axis=1), cnt
+
+    @pytest.mark.parametrize("B,n,T", [
+        (1, 100, 7),
+        (3, 257, 40),
+        (7, 1000, 120),
+        (4, 513, 300),   # T well past the topk kernel's k <= 128 cap
+        (5, 500, 1),
+        (2, 64, 64),     # T = n
+    ])
+    def test_matches_topk(self, B, n, T):
+        rng = np.random.default_rng(B * 1000 + n + T)
+        d = jnp.asarray(rng.normal(size=(B, n)) ** 2 * 3, jnp.float32)
+        T_pad = min(T + max(64, T // 8), n)
+        got_v, got_i, cnt = self._finish(d, T, T_pad=T_pad)
+        want_v, want_i = ref.topk_smallest(d, T)
+        np.testing.assert_array_equal(got_i, want_i)
+        np.testing.assert_array_equal(got_v, want_v)
+        assert (np.asarray(cnt) >= T).all()
+        assert (np.asarray(cnt) <= T_pad).all()
+
+    @pytest.mark.parametrize("seed_scale", [1e-9, 1e9])
+    def test_hopeless_seed_recovers(self, seed_scale):
+        """The rung ladder is seeded from Eq. 9, but the data-max /
+        zero brackets must rescue an arbitrarily wrong seed."""
+        rng = np.random.default_rng(17)
+        d = jnp.asarray(rng.normal(size=(4, 300)) ** 2, jnp.float32)
+        vp, ip, _ = radius_select_pallas(
+            d, jnp.full((4,), seed_scale, jnp.float32), 30, T_pad=94,
+            interpret=True)
+        neg, pos = jax.lax.top_k(-vp, 30)
+        _, want_i = ref.topk_smallest(d, 30)
+        np.testing.assert_array_equal(
+            jnp.take_along_axis(ip, pos, axis=1), want_i)
+
+    def test_multi_tile_matches_single(self):
+        rng = np.random.default_rng(3)
+        d = jnp.asarray(rng.normal(size=(2, 700)) ** 2, jnp.float32)
+        _, i1, _ = self._finish(d, 90, T_pad=180, block_n=128)
+        _, i2, _ = self._finish(d, 90, T_pad=180, block_n=1024)
+        np.testing.assert_array_equal(i1, i2)
+
+    def test_ref_oracle_matches_topk(self):
+        rng = np.random.default_rng(8)
+        d = jnp.asarray(rng.normal(size=(6, 800)) ** 2, jnp.float32)
+        for T in (1, 5, 150, 799, 800):
+            got_v, got_i = ref.radius_select(d, T)
+            want_v, want_i = ref.topk_smallest(d, T)
+            np.testing.assert_array_equal(got_i, want_i)
+            np.testing.assert_array_equal(got_v, want_v)
+
+    @pytest.mark.parametrize("force", ["ref", "interpret"])
+    def test_tie_cluster_overflow_falls_back_exact(self, force):
+        """A tie cluster wider than the survivor buffer would truncate
+        in index order and lose true top-T members; the dispatch must
+        detect the overflow and reroute to the exact sort."""
+        d = np.full((1, 2000), 5.0, np.float32)
+        d[0, 1997:] = 0.5  # the true top-T lives at the highest indices
+        d = jnp.asarray(d)
+        got_v, got_i = ops.radius_select(d, 10, T_pad=300, force=force)
+        want_v, want_i = ref.topk_smallest(d, 10)
+        np.testing.assert_array_equal(got_i, want_i)
+        np.testing.assert_array_equal(got_v, want_v)
+        assert set(np.asarray(got_i)[0, :3].tolist()) == {1997, 1998, 1999}
+
+
+class TestVerifyTopk:
+    """Gather-free verification kernel vs the materializing oracle."""
+
+    @pytest.mark.parametrize("B,n,d,Tc,k", [
+        (1, 50, 8, 10, 3),
+        (3, 300, 24, 80, 7),
+        (7, 129, 33, 64, 10),
+        (2, 513, 96, 200, 16),
+        (4, 100, 17, 100, 1),
+    ])
+    def test_matches_ref(self, B, n, d, Tc, k):
+        rng = np.random.default_rng(B * 100 + n + Tc)
+        data = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+        q = jnp.asarray(rng.normal(size=(B, d)), jnp.float32)
+        cand = jnp.asarray(
+            np.stack([rng.permutation(n)[:Tc] for _ in range(B)]), jnp.int32)
+        gv, gi = verify_topk_pallas(data, q, cand, k, interpret=True)
+        wv, wi = ref.verify_topk(data, q, cand, k)
+        np.testing.assert_array_equal(gi, wi)
+        np.testing.assert_allclose(gv, wv, rtol=1e-5, atol=1e-4)
+
+    def test_padding_candidates(self):
+        """-1 candidate ids must surface only as (-1, inf) slots."""
+        rng = np.random.default_rng(5)
+        data = jnp.asarray(rng.normal(size=(40, 12)), jnp.float32)
+        q = jnp.asarray(rng.normal(size=(2, 12)), jnp.float32)
+        cand = jnp.full((2, 16), -1, jnp.int32).at[:, :4].set(
+            jnp.asarray([[0, 5, 9, 11], [3, 8, 2, 30]], jnp.int32))
+        gv, gi = verify_topk_pallas(data, q, cand, 6, interpret=True)
+        gv, gi = np.asarray(gv), np.asarray(gi)
+        assert (gi[:, 4:] == -1).all() and np.isinf(gv[:, 4:]).all()
+        assert (gi[:, :4] >= 0).all() and np.isfinite(gv[:, :4]).all()
+        wv, wi = ref.verify_topk(data, q, cand, 6)
+        np.testing.assert_array_equal(gi, wi)
+
+    def test_multi_tile_matches_single(self):
+        rng = np.random.default_rng(9)
+        data = jnp.asarray(rng.normal(size=(600, 20)), jnp.float32)
+        q = jnp.asarray(rng.normal(size=(3, 20)), jnp.float32)
+        cand = jnp.asarray(
+            np.stack([rng.permutation(600)[:300] for _ in range(3)]),
+            jnp.int32)
+        v1, i1 = verify_topk_pallas(data, q, cand, 9, block_t=128,
+                                    interpret=True)
+        v2, i2 = verify_topk_pallas(data, q, cand, 9, block_t=512,
+                                    interpret=True)
+        np.testing.assert_array_equal(i1, i2)
+        np.testing.assert_allclose(v1, v2, rtol=1e-6)
+
+    def test_k_cap_is_loud(self):
+        data = jnp.zeros((300, 4), jnp.float32)
+        q = jnp.zeros((1, 4), jnp.float32)
+        cand = jnp.zeros((1, 200), jnp.int32)
+        with pytest.raises(ValueError, match="k=150 > 128"):
+            verify_topk_pallas(data, q, cand, 150, interpret=True)
+
+
+class TestDispatch:
+    def test_pairwise_batched_candidate_rows(self):
+        """(B, n, d) per-query candidate rows — the VERIFY form — must
+        dispatch through ref and interpret identically."""
+        rng = np.random.default_rng(13)
+        q = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
+        x = jnp.asarray(rng.normal(size=(4, 33, 16)), jnp.float32)
+        a = np.asarray(ops.pairwise_sq_dist(q, x, force="ref"))
+        want = np.stack([
+            np.sum((np.asarray(x)[b] - np.asarray(q)[b][None]) ** 2, axis=-1)
+            for b in range(4)])
+        np.testing.assert_allclose(a, want, rtol=1e-4, atol=1e-4)
+        b = np.asarray(ops.pairwise_sq_dist(q, x, force="interpret"))
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-4)
+
+    def test_topk_large_k_falls_back(self):
+        """k > 128 must not hit the selection-network kernel: the
+        pallas/interpret modes transparently reroute to radius_select."""
+        rng = np.random.default_rng(14)
+        d = jnp.asarray(rng.normal(size=(3, 400)) ** 2, jnp.float32)
+        gv, gi = ops.topk_smallest(d, 200, force="interpret")
+        wv, wi = ref.topk_smallest(d, 200)
+        np.testing.assert_array_equal(gi, wi)
+        np.testing.assert_array_equal(gv, wv)
+
+    def test_topk_kernel_k_cap_is_loud(self):
+        d = jnp.zeros((2, 400), jnp.float32)
+        with pytest.raises(ValueError, match="k=200 > 128"):
+            topk_smallest_pallas(d, 200, interpret=True)

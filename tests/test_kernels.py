@@ -210,6 +210,23 @@ class TestADC:
                                    rtol=1e-4, atol=1e-3)
 
 
+class TestRadiusSelectProperty:
+    """Hypothesis sweep for the radius-select oracle; the deterministic
+    kernel/oracle suites live in tests/test_fused.py, which does not
+    depend on hypothesis and therefore runs in every environment."""
+
+    @given(B=st.integers(1, 6), N=st.integers(2, 400),
+           frac=st.floats(0.01, 1.0), seed=st.integers(0, 100))
+    @settings(max_examples=10, deadline=None)
+    def test_property_random(self, B, N, frac, seed):
+        rng = np.random.default_rng(seed)
+        T = max(1, min(int(frac * N), N))
+        d = jnp.asarray(rng.normal(size=(B, N)) ** 2 * 5, jnp.float32)
+        got_v, got_i = ref.radius_select(d, T)
+        want_v, want_i = ref.topk_smallest(d, T)
+        np.testing.assert_array_equal(got_i, want_i)
+
+
 class TestOpsDispatch:
     def test_ref_and_interpret_agree(self):
         from repro.kernels import ops
