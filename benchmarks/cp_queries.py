@@ -1,20 +1,123 @@
-"""Table 6 reproduction: (c,k)-ACP query performance overview.
+"""Closest-pair benchmarks: Table 6 sweep + the fused CP engine.
 
-Every CP-capable backend in the ``repro.index`` registry — PM-LSH
-radius filtering, the sharded ring, LSB-tree, ACP-P, MkCP, and NLJ
-(exact) — swept through the one facade API on the synthetic twins:
-query time, overall ratio (Eq. 14), recall, pairs verified.
+Part 1 — Table 6 reproduction: every CP-capable backend in the
+``repro.index`` registry (PM-LSH radius filtering, the fused device
+engine via flat/flat-pq/streaming, the sharded ring, LSB-tree, ACP-P,
+MkCP, NLJ exact) swept through the one facade API on the synthetic
+twins: query time, overall ratio (Eq. 14), recall, pairs verified.
+
+Part 2 — the pruning story (DESIGN.md §10): brute force vs the host
+PM-tree radius filter vs the fused tile-masked engine at n ≥ 4096,
+with p50/p99 latency and the pair-accounting counters
+(``pairs_verified`` / ``tiles_pruned``) that show the γ·t·ub filter
+actually cutting verification volume.  Emitted machine-readable as
+``BENCH_cp_queries.json`` via ``benchmarks.run``.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from .common import csv_row, overall_ratio, timer
+from .common import (
+    csv_row,
+    latency_quantiles_us,
+    overall_ratio,
+    publish_summary,
+    timer,
+    timer_samples,
+)
 from .datasets import make_dataset
 
 
 def _pairset(pairs):
     return set(tuple(sorted(p)) for p in np.asarray(pairs).tolist())
+
+
+def _brute_cp(data: np.ndarray, k: int, block: int = 1024):
+    """Exhaustive blocked self-join — the brute-force TIMING baseline.
+
+    Deliberately not the registered ``nlj`` backend or
+    ``PMLSH_CP.exact_cp``: those maintain a Python pair heap (fine as
+    small-n ground truth in the Table 6 sweep above, ~100× slower per
+    pair), and a fair "brute force" latency bar at n ≥ 4096 needs the
+    best dense implementation the host can offer — blocked float64
+    matmuls and one argpartition per tile.
+
+    Returns (pairs (k, 2), distances (k,), pairs_verified).
+    """
+    x = np.asarray(data, np.float32)
+    n = x.shape[0]
+    norms = np.sum(x.astype(np.float64) ** 2, axis=1)
+    best_d, best_i, best_j = [], [], []
+    count = 0
+    for i0 in range(0, n, block):
+        a = x[i0:i0 + block].astype(np.float64)
+        for j0 in range(i0, n, block):
+            b = x[j0:j0 + block].astype(np.float64)
+            d2 = (norms[i0:i0 + block, None] + norms[None, j0:j0 + block]
+                  - 2.0 * (a @ b.T))
+            gi = i0 + np.arange(a.shape[0])[:, None]
+            gj = j0 + np.arange(b.shape[0])[None, :]
+            valid = gj > gi
+            count += int(valid.sum())
+            d2 = np.where(valid, d2, np.inf)
+            flat = np.argpartition(d2.ravel(), min(k, d2.size - 1))[:k]
+            best_d.extend(d2.ravel()[flat].tolist())
+            best_i.extend(np.broadcast_to(gi, d2.shape).ravel()[flat].tolist())
+            best_j.extend(np.broadcast_to(gj, d2.shape).ravel()[flat].tolist())
+    order = np.argsort(best_d)[:k]
+    pairs = np.stack([np.asarray(best_i)[order], np.asarray(best_j)[order]],
+                     axis=1).astype(np.int32)
+    dists = np.sqrt(np.maximum(np.asarray(best_d)[order], 0)).astype(
+        np.float32)
+    return pairs, dists, count
+
+
+def _fused_engine_rows(quick: bool) -> list[str]:
+    from repro.index import IndexConfig, build_index
+
+    n = 4096 if quick else 8192
+    k = 10
+    repeats = 3 if quick else 5
+    data = make_dataset("audio", n=n)
+    out = []
+
+    (exact_pairs, exact_d, brute_count), brute_samples = timer_samples(
+        _brute_cp, data, k, repeats=repeats)
+    exact_set = _pairset(exact_pairs)
+    q = latency_quantiles_us(brute_samples)
+    out.append(csv_row(
+        f"cp_engine_n{n}_brute", q["mean_us"],
+        "p50_us=%.0f;p99_us=%.0f;recall=1.000;ratio=1.0000;verified=%d;"
+        "tiles_pruned=0" % (q["p50_us"], q["p99_us"], brute_count)))
+    summary = {"n": n, "k": k, "brute_pairs_verified": brute_count,
+               "brute_p50_us": q["p50_us"]}
+
+    for label, backend in [("pmtree", "pmtree"), ("fused", "flat")]:
+        index = build_index(data, IndexConfig(backend=backend, cp_c=4.0,
+                                              seed=0))
+        index.cp_search(k)  # warm up: lazy CP build / jit tracing
+        res, samples = timer_samples(index.cp_search, k, repeats=repeats)
+        q = latency_quantiles_us(samples)
+        rec = len(_pairset(res.pairs) & exact_set) / k
+        ratio = overall_ratio(res.distances, exact_d)
+        out.append(csv_row(
+            f"cp_engine_n{n}_{label}", q["mean_us"],
+            "p50_us=%.0f;p99_us=%.0f;recall=%.3f;ratio=%.4f;verified=%d;"
+            "tiles_pruned=%d" % (q["p50_us"], q["p99_us"], rec, ratio,
+                                 res.stats.pairs_verified,
+                                 res.stats.tiles_pruned)))
+        summary[f"{label}_pairs_verified"] = res.stats.pairs_verified
+        summary[f"{label}_tiles_pruned"] = res.stats.tiles_pruned
+        summary[f"{label}_recall"] = rec
+        summary[f"{label}_p50_us"] = q["p50_us"]
+
+    # the acceptance contract of the fused engine: the radius filter
+    # must actually prune, and prune must actually cut verification
+    assert summary["fused_tiles_pruned"] > 0, "no tiles pruned at n>=4096"
+    assert summary["fused_pairs_verified"] < brute_count, (
+        "fused CP verified as many pairs as brute force")
+    publish_summary("cp_engine", **summary)
+    return out
 
 
 def run(quick: bool = True):
@@ -47,4 +150,5 @@ def run(quick: bool = True):
                 "recall=%.3f;ratio=%.4f;verified=%d"
                 % (rec, ratio, res.stats.candidates_verified),
             ))
+    out.extend(_fused_engine_rows(quick))
     return out

@@ -9,7 +9,7 @@ summary blocks the module published via ``common.publish_summary``) so
 the perf trajectory — recall, p50/p99 latency, bytes/point — is
 diffable across PRs.
 
-Algorithm sweeps (table4_nn, table6_cp, fig8_param_study) go through
+Algorithm sweeps (table4_nn, cp_queries, fig8_param_study) go through
 the canonical entry point ``repro.index.build_index(data,
 IndexConfig(backend=...))`` and iterate the backend registry, so a
 newly registered backend shows up in the tables automatically.
@@ -31,7 +31,7 @@ MODULES = [
     ("fig8_param_study", "benchmarks.param_study"),
     ("table4_nn", "benchmarks.nn_queries"),
     ("figs9_13_curves", "benchmarks.nn_curves"),
-    ("table6_cp", "benchmarks.cp_queries"),
+    ("cp_queries", "benchmarks.cp_queries"),
     ("figs7_14_16_gamma", "benchmarks.gamma_study"),
     ("kernel_micro", "benchmarks.kernel_micro"),
     ("query_pipeline", "benchmarks.query_pipeline"),

@@ -54,6 +54,17 @@ def main():
           f"verified {cp_res.stats.candidates_verified} of "
           f"{1000 * 999 // 2} pairs")
 
+    # same call on the device-native engine (DESIGN.md §10): Alg. 4's
+    # radius filter as pair-join tile masking, ub register in VMEM
+    fused_cp = build_index(data[:1000], backend="flat").cp_search(k=5)
+    fused_recall = len(
+        {tuple(sorted(p)) for p in fused_cp.pairs.tolist()}
+        & {tuple(sorted(p)) for p in exact_cp.pairs.tolist()}
+    ) / 5
+    print(f"CP fused engine:     recall={fused_recall:.2f} "
+          f"verified {fused_cp.stats.pairs_verified} pairs, "
+          f"pruned {fused_cp.stats.tiles_pruned} tiles")
+
 
 if __name__ == "__main__":
     main()

@@ -14,8 +14,14 @@ flat+pq, flat-pq, codes-only, streaming with quantized segments):
 encode→search recall on the fixed seed must stay within a floor of the
 float32 flat backend, the SearchResult padding invariants (-1 indices
 / +inf distances, int32/float32) must hold — exercised with k > n —
-and quantized storage must actually be smaller than float32.  Exits
-non-zero on the first violation.
+and quantized storage must actually be smaller than float32.
+
+A CP conformance gate keeps the "cp" capability honest: every backend
+advertising it must return SORTED, EXACT-VERIFIED pairs (ascending
+distances that match a recomputation from the raw rows, i < j, no
+duplicates, full recall of the unambiguous seeded closest pair) with
+weakly k-monotone WorkStats pair accounting.  Exits non-zero on the
+first violation.
 
     PYTHONPATH=src python scripts/check_api.py
 """
@@ -137,6 +143,50 @@ def check_quant(data, queries, rng) -> None:
           f"padding, streaming-quant]")
 
 
+def check_cp(data, rng) -> None:
+    """Capability-honest CP gate over every backend advertising "cp"."""
+    from repro.index import IndexConfig, available_backends, build_index
+
+    # plant one unambiguous closest pair so recall@1 is well-defined
+    # for every backend regardless of its approximation ratio
+    data = np.array(data, copy=True)
+    data[7] = data[3] + 1e-3 * rng.normal(size=data.shape[1]).astype(
+        np.float32)
+    for backend in available_backends("cp"):
+        index = build_index(data, IndexConfig(backend=backend, seed=0))
+        prev_verified = -1
+        for k in (1, 3, 6):
+            res = index.cp_search(k)
+            p, d = res.pairs, res.distances
+            assert p.dtype == np.int32 and d.dtype == np.float32, backend
+            assert p.shape == (len(d), 2) and len(d) <= k, (
+                f"{backend}: shape {p.shape} for k={k}")
+            assert len(d) >= 1, f"{backend}: no pairs returned"
+            assert (p[:, 0] != p[:, 1]).all(), f"{backend}: self-pair"
+            keys = {tuple(sorted(r)) for r in p.tolist()}
+            assert len(keys) == len(p), f"{backend}: duplicate pair"
+            assert (np.diff(d) >= -1e-5).all(), (
+                f"{backend}: distances not sorted: {d}")
+            # exact-verified: returned distances match the raw rows
+            true = np.linalg.norm(data[p[:, 0]] - data[p[:, 1]], axis=-1)
+            np.testing.assert_allclose(
+                d, true, rtol=1e-3, atol=1e-4,
+                err_msg=f"{backend}: distances not exact-verified")
+            assert tuple(sorted(p[0])) == (3, 7), (
+                f"{backend}: missed the planted closest pair, got {p[0]}")
+            # pair accounting: weakly monotone in k (the radius filter's
+            # ub only widens with k; exhaustive backends report a
+            # constant), and the new counters are self-consistent
+            verified = res.stats.pairs_verified
+            assert verified >= prev_verified, (
+                f"{backend}: pairs_verified not monotone in k "
+                f"({prev_verified} -> {verified})")
+            prev_verified = verified
+            assert res.stats.tiles_pruned >= 0
+    print(f"  ok   cp gate       [{len(available_backends('cp'))} backends: "
+          "sorted exact-verified pairs, monotone pair accounting]")
+
+
 def main() -> int:
     from repro.index import (
         CpSearchResult,
@@ -202,11 +252,17 @@ def main() -> int:
         failures.append("quant-gate")
         print(f"  FAIL quant gate    {type(e).__name__}: {e}")
 
+    try:
+        check_cp(data, rng)
+    except Exception as e:  # noqa: BLE001
+        failures.append("cp-gate")
+        print(f"  FAIL cp gate       {type(e).__name__}: {e}")
+
     if failures:
         print(f"check_api: FAILED for {failures}")
         return 1
     print(f"check_api: all {len(available_backends())} backends conform "
-          "+ quant gate")
+          "+ quant gate + cp gate")
     return 0
 
 

@@ -1,10 +1,12 @@
 """CI smoke: interpret-mode parity for the fused-pipeline kernels.
 
-Runs the two DESIGN.md §9 kernels — radius-threshold selection and
-gather-free verification — through bit-accurate interpret mode against
-their jnp ref oracles on small random cases and gates on max |Δ|.
-Fast enough for every CI run; the exhaustive shape sweeps live in
-tests/test_kernels.py.
+Runs the DESIGN.md §9 kernels — radius-threshold selection and
+gather-free verification — plus the §10 closest-pair join through
+bit-accurate interpret mode against their ref oracles on small random
+cases and gates on max |Δ| (for the pair join: identical pairs AND
+identical work counters, since WorkStats feeds on them).  Fast enough
+for every CI run; the exhaustive shape sweeps live in
+tests/test_kernels.py and tests/test_cp_fused.py.
 
     PYTHONPATH=src python scripts/kernel_parity_smoke.py
 """
@@ -62,6 +64,28 @@ def main() -> int:
               f"max|dv|={dv:.2e} idx_mismatch={di} [{status}]")
         if status == "FAIL":
             failures.append(f"verify_topk({B},{n},{d_},{Tc},{k})")
+
+    # -- pair-join: pruned CP self-join vs the band-major oracle --------
+    from repro.kernels.pair_join import pair_join_pallas
+
+    for n, d_, k, thresh2 in [(200, 16, 8, 16.0), (300, 24, 10, float("inf"))]:
+        x = np.asarray(rng.normal(size=(n, d_)), np.float32)
+        key = x @ np.asarray(rng.normal(size=(d_,)), np.float32)
+        order = np.argsort(key, kind="stable")
+        xs, ks = x[order], key[order]
+        gv, gi, gj, gs = pair_join_pallas(
+            jnp.asarray(xs), jnp.asarray(ks), k, thresh2=thresh2,
+            interpret=True)
+        wv, wi, wj, ws = ref.pair_join(xs, ks, k, thresh2=thresh2)
+        dv = float(jnp.abs(jnp.asarray(gv) - wv).max())
+        di = int(jnp.sum(jnp.asarray(gi) != wi) + jnp.sum(jnp.asarray(gj) != wj))
+        ds = int(np.abs(np.asarray(gs) - ws).sum())
+        status = "ok" if (dv <= 1e-4 * d_ and di == 0 and ds == 0) else "FAIL"
+        print(f"pair_join n={n} d={d_} k={k} thresh2={thresh2}: "
+              f"max|dv|={dv:.2e} idx_mismatch={di} stats_mismatch={ds} "
+              f"[{status}]")
+        if status == "FAIL":
+            failures.append(f"pair_join({n},{d_},{k})")
 
     if failures:
         print(f"PARITY SMOKE FAILED: {failures}", file=sys.stderr)

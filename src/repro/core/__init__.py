@@ -11,6 +11,9 @@ Public surface:
                gather-free VERIFY (one entry point for all device backends)
   ann        — Algorithms 1-2: (r,c)-BC, (c,k)-ANN (paper-faithful)
   cp         — Algorithms 3-5: (c,k)-ACP branch&bound + radius filtering
+               (host reference; ``exact_cp`` is the exact oracle)
+  cp_fused   — the device-native CP engine: Alg. 4's radius filter as
+               tile masking over the pair-join kernel (DESIGN.md §10)
   distributed — shard_map sharded index: multi-device ANN / CP
 """
 from .hashing import ProjectionFamily, BucketFamily  # noqa: F401
@@ -31,6 +34,7 @@ from .flat_index import (  # noqa: F401
     candidate_budget,
 )
 from .fused import fused_ann_query, select_seed  # noqa: F401
+from .cp_fused import CpFusedResult, cp_fused_search, cp_threshold2  # noqa: F401
 
 # The backend-pluggable entry point over this module's index families
 # lives in ``repro.index`` (build_index / IndexConfig / SearchResult);

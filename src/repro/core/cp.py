@@ -13,7 +13,10 @@
   Pr(γ) = 85% quantile.
 
 Pair verification (original-space distances) is the dense hot spot and
-is vectorized; on device it maps to the Pallas pairwise kernel.
+is vectorized.  This module is the paper-faithful HOST reference: the
+device-native engine (``core/cp_fused.py`` + ``kernels/pair_join.py``)
+re-expresses the Algorithm-4 radius filter as tile masking and is
+parity-tested against ``exact_cp`` here.
 """
 from __future__ import annotations
 

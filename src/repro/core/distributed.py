@@ -207,9 +207,10 @@ class DistributedCP:
         self.mesh = mesh
         self.axis = axis
         self.family = ProjectionFamily.create(data.shape[1], m, seed=seed)
-        proj = np.asarray(self.family.project(np.asarray(data, np.float32)))
-        self.data_sh, self.n = shard_points(np.asarray(data, np.float32),
-                                            mesh, axis)
+        data = np.asarray(data, np.float32)
+        proj = np.asarray(self.family.project(data))
+        self.data_host = data  # row lookups for the exact re-verification
+        self.data_sh, self.n = shard_points(data, mesh, axis)
         self.proj_sh, _ = shard_points(proj, mesh, axis)
         self.t = solve_parameters(c, m=m).t
 
@@ -220,9 +221,22 @@ class DistributedCP:
                 self.data_sh, self.proj_sh, mesh=self.mesh, k=k,
                 axis=self.axis, n_valid=self.n, t_mult=float(self.t),
             )
-        d = np.sqrt(np.maximum(np.asarray(d), 0)).astype(np.float32)
         pairs = (np.stack([np.asarray(i), np.asarray(j)], axis=1)
                  .astype(np.int32))
+        d = np.asarray(d, np.float32)
+        # drop the ring top_k's filler slots (inf distance — fewer real
+        # pairs than k exist) BEFORE re-verifying: recomputing a filler
+        # self-pair would turn its +inf into a real 0.0 and rank it first
+        real = np.isfinite(d) & (pairs[:, 0] != pairs[:, 1])
+        pairs = pairs[real]
+        # the ring join ranks pairs by norm-trick distances, which
+        # cancel catastrophically between near-duplicates — exactly
+        # where CP answers live.  Recompute the winners in the stable
+        # subtract-then-norm form and re-sort (≤ k rows, free).
+        diff = self.data_host[pairs[:, 0]] - self.data_host[pairs[:, 1]]
+        d = np.sqrt(np.sum(diff * diff, axis=1)).astype(np.float32)
+        resort = np.argsort(d, kind="stable")
+        pairs, d = pairs[resort], d[resort]
         if with_stats:
             return pairs, d, int(cnt)
         return pairs, d

@@ -11,7 +11,7 @@ study — behind one batched API:
     res = index.search(queries, k=10)     # (B, k) int32 / float32
     res.stats.candidates_verified         # unified work accounting
 
-    cp = build_index(data, IndexConfig(backend="pmtree")).cp_search(k=10)
+    cp = build_index(data, IndexConfig(backend="flat")).cp_search(k=10)
 
 Backends register by name (``available_backends()`` lists them):
 pmtree, flat, flat-pq (quantized storage + ADC rerank from
@@ -20,7 +20,10 @@ pmtree, flat, flat-pq (quantized storage + ADC rerank from
 the §7 baselines (multiprobe, qalsh, srs, rlsh, lscan, lsb_tree,
 acp_p, mkcp, nlj).  Quantization is also an option on the flat
 backend: ``IndexConfig(backend="flat", options={"quant": "sq8"|"pq",
-"rerank": 128})``.  See DESIGN.md §4, §7 and §8.
+"rerank": 128})``.  Closest pair (``cp_search``) is served by every
+first-party backend — flat/flat-pq/streaming through the fused CP
+engine (DESIGN.md §10).  See DESIGN.md §4, §7, §8 and §10, and
+docs/paper_map.md for the paper-to-code map.
 """
 from .config import IndexConfig  # noqa: F401
 from .registry import (  # noqa: F401

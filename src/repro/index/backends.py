@@ -1,15 +1,24 @@
 """Backend adapters: every probing mechanism behind one protocol.
 
-Three first-party backends realize the PM-LSH contract:
+Four first-party backends realize the PM-LSH contract:
 
-  pmtree  — the paper-faithful host index (Algorithms 1-2, counted work)
-  flat    — the device-native dense estimate→select→verify pipeline
-  sharded — the flat pipeline sharded over a mesh (tournament merge)
+  pmtree    — the paper-faithful host index (Algorithms 1-5, counted work)
+  flat      — the device-native dense estimate→select→verify pipeline
+  flat-pq   — the flat pipeline over PQ codes with an ADC rerank tier
+  sharded   — the flat pipeline sharded over a mesh (tournament merge)
 
+(the mutable ``streaming`` backend registers from ``repro.stream``)
 and every competitor from the §7 study registers under the same
 protocol through thin adapters, so sweeps are a registry iteration.
 Host backends loop over the batch internally; device backends are
 batched end-to-end under jit.
+
+Closest-pair (§6) is served by every first-party backend: pmtree walks
+the PM-tree radius filter on the host, sharded runs the distributed
+ring join, and flat / flat-pq / streaming route through the
+device-native ``cp_fused`` engine (Algorithm 4's radius filter as
+pair-join tile masking, DESIGN.md §10) — flat-pq generating candidates
+from code-estimated distances and exact-verifying the survivors.
 """
 from __future__ import annotations
 
@@ -171,13 +180,24 @@ class PMTreeBackend(BaseIndex):
         return CpSearchResult(
             r.pairs, r.distances,
             stats=WorkStats(rounds=r.nodes_examined,
-                            candidates_verified=r.pairs_verified),
+                            candidates_verified=r.pairs_verified,
+                            pairs_verified=r.pairs_verified),
         )
 
 
-@register_backend("flat", capabilities=("ann",))
+@register_backend("flat", capabilities=("ann", "cp"))
 class FlatBackend(BaseIndex):
     """Device-native dense pipeline (DESIGN.md §3), jit'd and batched.
+
+    Closest-pair queries (``cp_search``) run the device-native engine
+    (DESIGN.md §10): the build-time projection's first coordinate sorts
+    the points, and the pair-join kernel sweeps the (n, n) tile space
+    with Algorithm 4's γ·t·ub radius filter as tile masking.  Quantized
+    indexes generate candidate pairs from code-estimated distances and
+    exact-verify the R best against the raw rows (codes-only indexes
+    answer from the estimates).  ``options={"cp_gamma": γ}`` widens or
+    tightens the filter; ``{"cp_rerank": R}`` sizes the quantized
+    rerank tier.
 
     Queries run the fused estimate→select→verify pipeline (DESIGN.md
     §9: radius-threshold selection + gather-free verification) when the
@@ -269,6 +289,47 @@ class FlatBackend(BaseIndex):
             ),
         )
 
+    def _cp_search(self, k: int) -> CpSearchResult:
+        from repro.core.cp_fused import cp_fused_search
+
+        cfg = self.config
+        gamma = float(cfg.options.get("cp_gamma", 1.0))
+        force = (self.force if self.force is not None
+                 else (None if self.use_kernels else "ref"))
+        key = np.asarray(self.impl.projected)[:, 0]
+        if self.codec is None:
+            r = cp_fused_search(np.asarray(self.impl.data), k, m=cfg.m,
+                                c=cfg.cp_c, gamma=gamma, force=force, key=key)
+            return CpSearchResult(
+                r.pairs, r.distances,
+                stats=WorkStats(candidates_verified=r.pairs_verified,
+                                pairs_verified=r.pairs_verified,
+                                tiles_pruned=r.tiles_pruned),
+            )
+        from repro.quant import quant_cp_search
+
+        if self.store_raw and getattr(self, "_cp_recon", None) is None:
+            # codes are immutable: decode once and reuse across queries.
+            # Codes-only indexes keep the per-call decode instead — they
+            # chose the small-footprint regime, so the reconstruction
+            # must stay transient.
+            self._cp_recon = np.asarray(self.codec.decode(self.codes),
+                                        dtype=np.float32)
+        R = cfg.options.get("cp_rerank")
+        pairs, dd, est, verified, pruned = quant_cp_search(
+            self.codec, self.codes, key, k,
+            raw=(self.data if self.store_raw else None),
+            R=None if R is None else int(R),
+            c=cfg.cp_c, m=cfg.m, gamma=gamma, force=force,
+            recon=getattr(self, "_cp_recon", None))
+        return CpSearchResult(
+            pairs, dd,
+            stats=WorkStats(candidates_verified=verified,
+                            point_distance_computations=est,
+                            pairs_verified=verified if self.store_raw else est,
+                            tiles_pruned=pruned),
+        )
+
     def bytes_per_point(self) -> float:
         if self.codec is None:
             return 4.0 * self.d
@@ -282,7 +343,7 @@ class FlatBackend(BaseIndex):
         return 4.0 * self.d
 
 
-@register_backend("flat-pq", capabilities=("ann", "quant"))
+@register_backend("flat-pq", capabilities=("ann", "quant", "cp"))
 class FlatPQBackend(FlatBackend):
     """The flat pipeline with PQ codes + ADC rerank pre-wired: PQ is
     trained at build time unless the config already names a codec, so
@@ -339,7 +400,8 @@ class ShardedBackend(BaseIndex):
                                           c=cfg.cp_c, seed=cfg.seed)
         pairs, dd, verified = self._cp_impl.cp_query(k=k, with_stats=True)
         return CpSearchResult(
-            pairs, dd, stats=WorkStats(candidates_verified=verified))
+            pairs, dd, stats=WorkStats(candidates_verified=verified,
+                                       pairs_verified=verified))
 
 
 # ---------------------------------------------------------------------------
@@ -372,8 +434,9 @@ class _HostBaseline(BaseIndex):
 
     def _cp_search(self, k: int) -> CpSearchResult:
         pairs, dd, work = self.impl.cp_query(k)
-        return CpSearchResult(pairs, dd,
-                              stats=WorkStats(candidates_verified=int(work)))
+        return CpSearchResult(
+            pairs, dd, stats=WorkStats(candidates_verified=int(work),
+                                       pairs_verified=int(work)))
 
 
 _BASELINES = [

@@ -32,10 +32,12 @@ _ORDER: list[str] = []  # registration order — the canonical sweep order
 
 
 #: the capability vocabulary sweeps and conformance gates filter on:
-#: "ann" — batched search(); "cp" — cp_search(); "stream" — mutable
-#: insert()/delete()/flush() on top of "ann"; "quant" — quantized point
-#: storage with an ADC rerank tier (returned distances may be
-#: code-estimated rather than exact)
+#: "ann" — batched search(); "cp" — cp_search() returning sorted
+#: exact-verified pairs with pair-accounting WorkStats (gated by
+#: scripts/check_api.py); "stream" — mutable insert()/delete()/flush()
+#: on top of "ann"; "quant" — quantized point storage with an ADC
+#: rerank tier (returned distances may be code-estimated rather than
+#: exact)
 KNOWN_CAPABILITIES = frozenset({"ann", "cp", "stream", "quant"})
 
 

@@ -34,6 +34,13 @@ class WorkStats:
     # distances (pmtree), code-estimated ADC distances (quant rerank);
     # candidates_verified stays the cross-backend-comparable exact count
     point_distance_computations: int = 0
+    # closest-pair accounting (§6 radius filter): pair distance comps
+    # issued by the join and whole tiles skipped by the γ·t·ub filter.
+    # pairs_verified mirrors the CP share of candidates_verified /
+    # point_distance_computations (exact vs code-estimated joins), so
+    # it is NOT added into total_distance_computations again.
+    pairs_verified: int = 0
+    tiles_pruned: int = 0
 
     def __add__(self, other: "WorkStats") -> "WorkStats":
         return WorkStats(
@@ -41,6 +48,8 @@ class WorkStats:
             self.candidates_verified + other.candidates_verified,
             self.node_distance_computations + other.node_distance_computations,
             self.point_distance_computations + other.point_distance_computations,
+            self.pairs_verified + other.pairs_verified,
+            self.tiles_pruned + other.tiles_pruned,
         )
 
     @property

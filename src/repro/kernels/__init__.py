@@ -12,6 +12,10 @@ kernels:
                   VMEM; the (B,T,d) candidate tensor never exists
   adc           — quantized RERANK: asymmetric distances over codes via
                   per-query LUTs (one-hot MXU contraction)
+  pair_join     — closest-pair SELF-JOIN: band-major tiles over the
+                  (n, n) pair space, streaming top-k pair heap (the ub
+                  register) in VMEM, Alg. 4's radius filter as tile
+                  masking over a 1-D projection sort
 ops  — jit'd public wrappers (backend-aware dispatch)
 ref  — pure-jnp oracles (the semantics contract; tests sweep against these)
 """

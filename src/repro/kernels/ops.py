@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .adc import adc_dist_pallas
+from .pair_join import pair_join_pallas
 from .pairwise_dist import pairwise_sq_dist_pallas
 from .project_dist import project_dist_pallas
 from .select import radius_select_pallas
@@ -24,7 +25,7 @@ from .topk import topk_smallest_pallas
 from .verify import verify_topk_pallas
 
 __all__ = ["pairwise_sq_dist", "project_dist", "topk_smallest", "adc_dist",
-           "radius_select", "verify_topk"]
+           "radius_select", "verify_topk", "pair_join"]
 
 
 def _mode(force: str | None) -> str:
@@ -146,6 +147,26 @@ def radius_select(d: jax.Array, T: int, *, tau0: jax.Array | None = None,
     # the exact sort rather than return a degraded candidate set
     return jax.lax.cond(jnp.any(cnt > T_pad),
                         lambda: ref.topk_smallest(d, T), _trim)
+
+
+def pair_join(x, key, k: int, *, thresh2: float, force: str | None = None,
+              block_n: int = 128):
+    """Top-k closest pairs of x's rows by pruned blockwise self-join.
+
+    x (n, d) sorted ascending by key (n,) → (d² (k,) ascending, pi (k,),
+    pj (k,), stats (2,) = [pairs_verified, tiles_pruned]); pi < pj are
+    row POSITIONS in the sorted order, (-1, +inf) past the real pair
+    count.  ``thresh2`` = (γ·t)² is Algorithm 4's radius filter as tile
+    masking; ``float('inf')`` disables pruning (exhaustive exact join).
+
+    k > 128 is outside the in-VMEM selection network's regime and
+    routes through the host oracle on every dispatch mode.
+    """
+    mode = _mode(force)
+    if mode == "ref" or k > 128:
+        return ref.pair_join(x, key, k, thresh2=thresh2, block_n=block_n)
+    return pair_join_pallas(x, key, k, thresh2=float(thresh2),
+                            block_n=block_n, interpret=(mode == "interpret"))
 
 
 def verify_topk(data: jax.Array, q: jax.Array, cand: jax.Array, k: int, *,

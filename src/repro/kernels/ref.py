@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["pairwise_sq_dist", "project_dist", "topk_smallest", "adc_dist",
-           "radius_select", "verify_topk"]
+           "radius_select", "verify_topk", "pair_join"]
 
 
 def pairwise_sq_dist(q: jax.Array, x: jax.Array) -> jax.Array:
@@ -145,6 +145,76 @@ def radius_select(d: jax.Array, T: int, *, T_pad: int | None = None,
     cnt_hi = jnp.sum((d <= hi).astype(jnp.int32), axis=1)
     return jax.lax.cond(jnp.any(cnt_hi > T_pad),
                         lambda: topk_smallest(d, T), _compact)
+
+
+def pair_join(x, key, k: int, *, thresh2: float, block_n: int = 128
+              ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Blockwise pruned closest-pair self-join — oracle of ``pair_join.py``.
+
+    Unlike the other oracles this one is host-side numpy, not jnp: the
+    tile-skip decision depends on the RUNNING k-th pair distance (the
+    kernel's ub register), i.e. on sequential data-dependent control
+    flow, so the reference replicates the kernel's exact band-major
+    traversal — same tile order, same norm-trick float32 distances,
+    same counters — with a Python tile loop.
+
+    Args / returns: see ``pair_join_pallas``.  x (n, d) sorted by
+    ``key`` (n,) ascending; returns (d² (k,) ascending, pi (k,),
+    pj (k,), stats (2,) = [pairs_verified, tiles_pruned]) with
+    (+inf, -1, -1) padding past the real pair count.  Ties resolve to
+    the earliest pair in traversal order, matching the kernel's
+    masked-argmin fold.
+    """
+    x = np.asarray(x, np.float32)
+    key = np.asarray(key, np.float32)
+    n = x.shape[0]
+    bN = max(min(block_n, n + (-n) % 8 if n else 8), 8)
+    n_ti = max(-(-n // bN), 1)
+    norms = np.sum(x * x, axis=1)
+    thresh2 = float(thresh2)
+
+    vals = np.empty((0,), np.float32)  # survivors in traversal order
+    pis = np.empty((0,), np.int64)
+    pjs = np.empty((0,), np.int64)
+    ub2 = np.inf
+    pairs_verified = 0
+    tiles_pruned = 0
+    for b in range(n_ti):
+        for i in range(n_ti - b):
+            j = i + b
+            si, sj = i * bN, j * bN
+            ei, ej = min(si + bN, n), min(sj + bN, n)
+            gap = float(key[sj] - key[ei - 1])  # sorted: block-j lo − block-i hi
+            if gap > 0.0 and gap * gap > thresh2 * ub2:
+                tiles_pruned += 1
+                continue
+            xi, xj = x[si:ei], x[sj:ej]
+            d2 = np.maximum(
+                norms[si:ei, None] + norms[None, sj:ej]
+                - 2.0 * (xi @ xj.T).astype(np.float32), 0.0)
+            gi = si + np.arange(ei - si)[:, None]
+            gj = sj + np.arange(ej - sj)[None, :]
+            valid = gj > gi
+            pairs_verified += int(valid.sum())
+            sel = valid.ravel()  # row-major == the kernel's flatten order
+            vals = np.concatenate([vals, d2.ravel()[sel]])
+            pis = np.concatenate([pis, np.broadcast_to(gi, d2.shape).ravel()[sel]])
+            pjs = np.concatenate([pjs, np.broadcast_to(gj, d2.shape).ravel()[sel]])
+            if vals.size > 4096 + k:  # keep the running pool bounded
+                keep = np.argsort(vals, kind="stable")[: 2 * k]
+                keep.sort()  # preserve traversal order among the kept
+                vals, pis, pjs = vals[keep], pis[keep], pjs[keep]
+            if vals.size >= k:
+                ub2 = float(np.partition(vals, k - 1)[k - 1])
+    order = np.argsort(vals, kind="stable")[:k]
+    out_v = np.full((k,), np.inf, np.float32)
+    out_i = np.full((k,), -1, np.int32)
+    out_j = np.full((k,), -1, np.int32)
+    out_v[: order.size] = vals[order]
+    out_i[: order.size] = pis[order]
+    out_j[: order.size] = pjs[order]
+    stats = np.asarray([pairs_verified, tiles_pruned], np.int64)
+    return out_v, out_i, out_j, stats
 
 
 def verify_topk(data: jax.Array, q: jax.Array, cand: jax.Array, k: int

@@ -21,4 +21,4 @@ from .codec import (  # noqa: F401
     train_pq,
     train_sq8,
 )
-from .search import quant_ann_query  # noqa: F401
+from .search import quant_ann_query, quant_cp_search  # noqa: F401

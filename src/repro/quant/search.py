@@ -26,7 +26,7 @@ from repro.core.flat_index import FlatIndex
 
 from .codec import Codec
 
-__all__ = ["quant_ann_query"]
+__all__ = ["quant_ann_query", "quant_cp_search"]
 
 
 @partial(jax.jit,
@@ -115,3 +115,76 @@ def quant_ann_query(
     negk, sel = jax.lax.top_k(-d2, k)
     idx = jnp.take_along_axis(rcand, sel, axis=1)
     return idx.astype(jnp.int32), jnp.sqrt(jnp.maximum(-negk, 0.0))
+
+
+def quant_cp_search(
+    codec: Codec,
+    codes,
+    key,
+    k: int,
+    *,
+    raw=None,
+    R: int | None = None,
+    c: float = 4.0,
+    m: int = 15,
+    gamma: float = 1.0,
+    force: str | None = None,
+    recon=None,
+):
+    """(c,k)-ACP over quantized storage (DESIGN.md §10).
+
+    The candidate join runs on code-estimated distances: points are
+    reconstructed from their codes (the decode that ADC sums per slot,
+    taken whole) and the fused pair-join engine generates the top-R
+    estimated pairs under the same γ·t·ub radius filter as the float
+    path.  With ``raw`` available the R survivors are then exact-
+    verified — one pair-distance pass over 2R rows — so returned
+    distances are exact; codes-only indexes answer straight from the
+    estimates.
+
+    Args:
+      codec / codes: the trained codec and the (n, S) point codes.
+      key: (n,) 1-D projection sort key (the flat index's first
+        projected coordinate, so CP shares the build-time family).
+      k: pairs to return.
+      raw: optional (n, d) float32 rows for the exact verify tier
+        (None when ``store_raw=False`` dropped them).
+      R: estimated-pair rerank budget, default max(4k, n/4, 64) capped
+        at 1024 — like the quant ANN rerank tier it must scale with
+        the pool (code-estimation noise on pair ORDER grows with n),
+        so a fixed budget would starve recall at scale; survivors are
+        exact-verified, so over-budgeting only costs 2R row reads.
+        Note R > 128 puts the estimated join past the pair-join
+        kernel's answer-network cap, so ``ops.pair_join`` serves it
+        from the (equally pruned) host band-major oracle regardless of
+        ``force`` — capping R per dispatch mode instead would fork
+        recall across modes.
+      recon: optional precomputed ``codec.decode(codes)`` — callers
+        with immutable codes (the flat backend) memoize it across
+        queries instead of re-decoding per call.
+
+    Returns (pairs (k', 2) int32 ascending by distance, distances (k',)
+    float32, pairs_estimated int, pairs_verified int, tiles_pruned int).
+    """
+    import numpy as np
+
+    from repro.core.cp_fused import cp_fused_search
+
+    if recon is None:
+        recon = codec.decode(codes)
+    recon = np.asarray(recon, dtype=np.float32)
+    n = recon.shape[0]
+    R = min(max(4 * k, n // 4, 64), 1024) if R is None else int(R)
+    R = min(max(R, k), max(n * (n - 1) // 2, 1))
+    est = cp_fused_search(recon, R, m=m, c=c, gamma=gamma, force=force,
+                          key=key)
+    if raw is None or est.pairs.shape[0] == 0:
+        kk = min(k, est.pairs.shape[0])
+        return (est.pairs[:kk], est.distances[:kk], est.pairs_verified,
+                0, est.tiles_pruned)
+    raw = np.asarray(raw, dtype=np.float32)
+    a, b = est.pairs[:, 0], est.pairs[:, 1]
+    d = np.linalg.norm(raw[a] - raw[b], axis=-1).astype(np.float32)
+    order = np.argsort(d, kind="stable")[:k]
+    return (est.pairs[order], d[order], est.pairs_verified,
+            int(est.pairs.shape[0]), est.tiles_pruned)

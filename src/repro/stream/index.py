@@ -17,8 +17,10 @@ segment — owns a live id at any time, so the merge never sees
 duplicates.
 
 Registered as backend ``"streaming"`` with capabilities
-``("ann", "stream")``; build it over (possibly empty) seed data via the
-ordinary facade call and mutate from there:
+``("ann", "stream", "cp")``; build it over (possibly empty) seed data
+via the ordinary facade call and mutate from there (``cp_search`` joins
+the live rows — all segments plus the delta — through the fused CP
+engine, DESIGN.md §10):
 
     index = build_index(data, IndexConfig(backend="streaming"))
     ids = index.insert(new_rows)        # visible to search immediately
@@ -49,7 +51,7 @@ import numpy as np
 
 from repro.index.backends import BaseIndex
 from repro.index.registry import register_backend
-from repro.index.types import SearchResult, WorkStats
+from repro.index.types import CpSearchResult, SearchResult, WorkStats
 
 from .delta import DeltaBuffer
 from .segment import Segment
@@ -57,7 +59,7 @@ from .segment import Segment
 __all__ = ["StreamingIndex"]
 
 
-@register_backend("streaming", capabilities=("ann", "stream"))
+@register_backend("streaming", capabilities=("ann", "stream", "cp"))
 class StreamingIndex(BaseIndex):
     """Mutable Index: static-backend segments + delta + tombstones."""
 
@@ -245,6 +247,50 @@ class StreamingIndex(BaseIndex):
         merged = np.take_along_axis(gids, cols, axis=1)
         merged = np.where(np.isinf(vals), -1, merged)
         return SearchResult(merged.astype(np.int32), vals, stats=stats)
+
+    # -- closest pair ----------------------------------------------------
+
+    def _cp_search(self, k: int) -> CpSearchResult:
+        """(c,k)-ACP over the LIVE rows (DESIGN.md §10).
+
+        Sources are gathered segment-by-segment, delta last, and the
+        concatenation feeds ONE fused pair join — the engine's
+        band-major tile sweep then covers every cross-source block
+        (segment×segment, delta×segment, delta×delta) under a single
+        γ·t·ub radius filter and one global ub register, instead of a
+        per-source-pair fan-out that would re-seed ub from scratch.
+        Tombstones are masked at gather time: dead rows never enter the
+        join, so no post-filter widening is needed.
+        """
+        from repro.core.cp_fused import cp_fused_search
+
+        blocks, gids = [], []
+        for seg in self.segments:  # sealed runs first, mutable delta last
+            live = seg.ids[self._alive[seg.ids]]
+            if live.size:
+                blocks.append(self._store[live])
+                gids.append(live)
+        if len(self.delta):
+            blocks.append(self.delta.vectors)
+            gids.append(self.delta.ids)
+        if not blocks or sum(b.shape[0] for b in blocks) < 2:
+            return CpSearchResult(np.empty((0, 2), np.int32),
+                                  np.empty((0,), np.float32))
+        x = np.concatenate(blocks, axis=0)
+        gid = np.concatenate(gids)
+        cfg = self.config
+        r = cp_fused_search(
+            x, k, m=cfg.m, c=cfg.cp_c,
+            gamma=float(cfg.options.get("cp_gamma", 1.0)),
+            seed=cfg.seed, force=self._force)
+        pairs = gid[r.pairs.astype(np.int64)]
+        pairs = np.stack([pairs.min(axis=1), pairs.max(axis=1)],
+                         axis=1).astype(np.int32)
+        return CpSearchResult(
+            pairs, r.distances,
+            stats=WorkStats(candidates_verified=r.pairs_verified,
+                            pairs_verified=r.pairs_verified,
+                            tiles_pruned=r.tiles_pruned))
 
     # -- introspection ---------------------------------------------------
 

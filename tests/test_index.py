@@ -68,8 +68,10 @@ class TestRegistry:
     def test_capability_guard(self, dataset):
         with pytest.raises(NotImplementedError):
             build_index(dataset[:100], backend="nlj").search(dataset[:1], 3)
+        # flat serves "cp" since the fused CP engine (DESIGN.md §10);
+        # multiprobe remains ANN-only
         with pytest.raises(NotImplementedError):
-            build_index(dataset[:100], backend="flat").cp_search(3)
+            build_index(dataset[:100], backend="multiprobe").cp_search(3)
 
 
 class TestBackendParity:

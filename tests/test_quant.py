@@ -268,7 +268,7 @@ class TestCodesOnlyMode:
 class TestFlatPQBackend:
     def test_registered_with_quant_capability(self):
         assert "flat-pq" in available_backends()
-        assert backend_capabilities("flat-pq") == {"ann", "quant"}
+        assert backend_capabilities("flat-pq") == {"ann", "quant", "cp"}
         assert "flat-pq" in available_backends("quant")
 
     def test_trains_pq_by_default(self, dataset):

@@ -273,16 +273,20 @@ class TestRegistry:
         assert "streaming" in available_backends()
         assert available_backends("stream") == ["streaming"]
         caps = backend_capabilities("streaming")
-        assert "ann" in caps and "stream" in caps and "cp" not in caps
+        # cp joined the set with the fused CP engine (DESIGN.md §10)
+        assert "ann" in caps and "stream" in caps and "cp" in caps
 
     def test_unknown_capability_rejected(self):
         with pytest.raises(ValueError, match="unknown capabilities"):
             register_backend("bogus", capabilities=("ann", "teleport"))
 
-    def test_cp_capability_guard(self):
-        index = build_index(np.eye(4, dtype=np.float32), stream_cfg())
-        with pytest.raises(NotImplementedError):
-            index.cp_search(2)
+    def test_cp_over_live_rows(self):
+        index = build_index(2.0 * np.eye(4, dtype=np.float32), stream_cfg())
+        res = index.cp_search(2)
+        assert res.pairs.shape == (2, 2)
+        # every pair of distinct one-hot rows is at distance 2√2
+        np.testing.assert_allclose(res.distances, 2.0 * np.sqrt(2.0),
+                                   rtol=1e-5)
 
 
 class TestServing:
