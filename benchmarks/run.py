@@ -37,6 +37,7 @@ MODULES = [
     ("query_pipeline", "benchmarks.query_pipeline"),
     ("stream_queries", "benchmarks.stream_queries"),
     ("quant_tradeoff", "benchmarks.quant_tradeoff"),
+    ("serve_load", "benchmarks.serve_load"),
 ]
 
 

@@ -1,0 +1,224 @@
+"""Serving-front-end load benchmark: find the scheduler's throughput knee.
+
+Closed loop: C concurrent clients submit-and-wait against the
+``repro.serve.RequestScheduler``; sweeping C finds the knee — the
+concurrency where batching has amortized per-call overhead and QPS
+saturates.  The baseline is the naive serving loop the repo had before
+ISSUE 6: one ``RetrievalStep``-style facade search per request.  Same
+index, same k (a palette power of two, so both run the identical
+(1→B, k) code path) — equal recall by construction, so the comparison
+is pure scheduling.
+
+Open loop: Poisson arrivals at multiples of the knee QPS, pumped in
+real time, with a bounded admission queue — measures what the closed
+loop cannot: deadline-flush latency under a trickle, queue growth and
+shed rate past saturation.
+
+A hot-trace pass (zipf-ish repeats over a small query set) measures
+the SQ8 cache's p50 cut, and the whole run audits compile stability:
+jit compiles across every ragged trace ≤ the bucket palette size.
+
+Self-gating acceptance (ISSUE 6): knee QPS strictly above naive QPS at
+equal recall; cache p50 measurably below the uncached p50; shed
+accounting sums to the submitted count.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import csv_row, latency_quantiles_us, publish_summary
+
+
+def _make_data(n: int, d: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(24, d)).astype(np.float32) * 4
+    return (centers[rng.integers(0, 24, n)]
+            + rng.normal(size=(n, d)).astype(np.float32) * 0.5)
+
+
+def _recall(indices: np.ndarray, exact: np.ndarray) -> float:
+    return float(np.mean([
+        len(set(row.tolist()) & set(ex.tolist())) / len(ex)
+        for row, ex in zip(indices, exact)
+    ]))
+
+
+def run(quick: bool = True):
+    from repro.serve import RequestScheduler, ServeConfig
+    from repro.serve.serve_step import make_retrieval_step
+
+    rng = np.random.default_rng(0)
+    n, d = (4096, 32) if quick else (32768, 64)
+    k = 16  # a palette power of two: naive and scheduler share the path
+    n_queries = 192 if quick else 1024
+    data = _make_data(n, d)
+    queries = (data[rng.integers(0, n, n_queries)]
+               + rng.normal(size=(n_queries, d)).astype(np.float32) * 0.05)
+    step, index = make_retrieval_step(data, np.arange(n), k=k)
+    out = []
+
+    # -- recall parity set (both serving paths score on these) ----------
+    probe = queries[:64]
+    dd = np.linalg.norm(data[None] - probe[:, None], axis=-1)
+    exact = np.argsort(dd, axis=1)[:, :k]
+
+    # -- naive baseline: one facade search per request -----------------
+    index.search(queries[:1], k)  # warm the (1, k) compile
+    lat = []
+    t0 = time.perf_counter()
+    for q in queries:
+        s = time.perf_counter()
+        index.search(q[None], k)
+        lat.append(time.perf_counter() - s)
+    naive_wall = time.perf_counter() - t0
+    naive_qps = n_queries / naive_wall
+    naive_q = latency_quantiles_us(lat)
+    naive_recall = _recall(
+        np.stack([index.search(q[None], k).indices[0] for q in probe]),
+        exact)
+    out.append(csv_row("serve_naive", naive_q["mean_us"],
+                       "qps=%.0f;p50_us=%.0f;p99_us=%.0f;recall=%.3f"
+                       % (naive_qps, naive_q["p50_us"], naive_q["p99_us"],
+                          naive_recall)))
+
+    # -- closed loop: sweep concurrency to the knee --------------------
+    sweep = [1, 2, 4, 8, 16, 32]
+    results = {}
+    compile_misses_total = 0
+    sched_recall = None
+    for C in sweep:
+        sched = RequestScheduler(step, config=ServeConfig(
+            b_max=32, k_max=32, cache=False, default_deadline_ms=1e6,
+            max_queue=4096))
+        rounds = max(1, n_queries // C)
+        # warm this B_pad's compile outside the timed loop
+        [t.result() for t in sched.submit_batch(queries[:C], k)]
+        t0 = time.perf_counter()
+        served = 0
+        for r in range(rounds):
+            qs = queries[(r * C) % n_queries:][:C]
+            tickets = sched.submit_batch(qs, k)
+            for t in tickets:  # closed loop: wait for the batch
+                t.result()
+            served += len(tickets)
+        wall = time.perf_counter() - t0
+        snap = sched.snapshot()
+        compile_misses_total += snap.compile_misses
+        results[C] = served / wall
+        if sched_recall is None:
+            sched_recall = _recall(sched.search(probe, k).indices, exact)
+        out.append(csv_row(
+            f"serve_closed_c{C}", wall / served * 1e6,
+            "qps=%.0f;p50_us=%.0f;p99_us=%.0f;padding=%.3f;compiles=%d"
+            % (results[C], snap.p50_us, snap.p99_us,
+               snap.padding_overhead, snap.compile_misses)))
+
+    knee_qps = max(results.values())
+    knee_c = min(C for C, q in results.items() if q >= 0.95 * knee_qps)
+    assert sched_recall == naive_recall, (
+        f"recall drifted: scheduler {sched_recall} vs naive {naive_recall}")
+    assert knee_qps > naive_qps, (
+        f"scheduler knee {knee_qps:.0f} qps not above naive "
+        f"{naive_qps:.0f} qps")
+    out.append(csv_row("serve_knee", 1e6 / knee_qps,
+                       "knee_c=%d;qps=%.0f;speedup_vs_naive=%.2f;recall=%.3f"
+                       % (knee_c, knee_qps, knee_qps / naive_qps,
+                          sched_recall)))
+    publish_summary(
+        "serve_knee", knee_concurrency=knee_c, knee_qps=round(knee_qps),
+        naive_qps=round(naive_qps),
+        speedup_vs_naive=round(knee_qps / naive_qps, 2),
+        recall_scheduler=round(sched_recall, 4),
+        recall_naive=round(naive_recall, 4), k=k, n=n, d=d)
+
+    # -- open loop: Poisson arrivals, bounded queue, real-time pump ----
+    # max_queue < b_max: the admission queue, not the bucket width, is
+    # the bound — overload shows up as shed rate instead of an
+    # unbounded backlog (the cooperative scheduler executes inline, so
+    # queue growth and time dilation are the two overload signatures)
+    arrivals = 256 if quick else 1024
+    overload_shed = None
+    for mult in (0.5, 1.0, 2.0, 4.0):
+        rate = mult * knee_qps
+        gaps = rng.exponential(1.0 / rate, size=arrivals)
+        sched = RequestScheduler(step, config=ServeConfig(
+            b_max=32, k_max=32, cache=False, default_deadline_ms=8.0,
+            max_queue=24, watermark=0.75, shed_policy="shed"))
+        tickets = []
+        t0 = time.perf_counter()
+        next_t = 0.0
+        for i in range(arrivals):
+            next_t += gaps[i]
+            sched.pump()  # at least one serving-loop tick per arrival
+            while time.perf_counter() - t0 < next_t:
+                sched.pump()
+            tickets.append(sched.submit(
+                queries[i % n_queries], k, deadline_ms=8.0))
+        sched.drain()
+        snap = sched.snapshot()
+        assert snap.submitted == snap.completed + snap.shed, (
+            "shed accounting does not sum to submitted")
+        done = [t.result() for t in tickets]
+        oks = [r for r in done if r.ok]
+        lats = [r.latency_s for r in oks]
+        q = latency_quantiles_us(lats)
+        out.append(csv_row(
+            f"serve_open_x{mult:g}", q["mean_us"],
+            "rate=%.0f;p50_us=%.0f;p99_us=%.0f;shed_rate=%.3f;"
+            "deadline_flushes=%d;padding=%.3f"
+            % (rate, q["p50_us"], q["p99_us"], snap.shed_rate,
+               snap.deadline_flushes, snap.padding_overhead)))
+        if mult == 4.0:
+            overload_shed = snap.shed_rate
+            publish_summary(
+                "serve_open_loop_overload", arrival_rate=round(rate),
+                shed_rate=round(snap.shed_rate, 4),
+                p50_us=round(q["p50_us"], 1), p99_us=round(q["p99_us"], 1),
+                padding_overhead=round(snap.padding_overhead, 4),
+                accounting_ok=True)
+    assert overload_shed > 0, "4x-knee overload never triggered admission"
+
+    # -- hot-query trace: SQ8 cache p50 cut ----------------------------
+    hot = queries[:24]
+    trace_len = 256 if quick else 1024
+    trace_ix = rng.integers(0, len(hot), size=trace_len)
+    p50 = {}
+    snaps = {}
+    for label, use_cache in (("off", False), ("on", True)):
+        sched = RequestScheduler(step, config=ServeConfig(
+            b_max=8, k_max=32, cache=use_cache, default_deadline_ms=1e6,
+            max_queue=4096))
+        [t.result() for t in sched.submit_batch(hot[:8], k)]  # warm
+        tickets = [sched.submit(hot[j], k) for j in trace_ix]
+        sched.drain()
+        lats = [t.result().latency_s for t in tickets]
+        snap = sched.snapshot()
+        q = latency_quantiles_us(lats)
+        p50[label] = q["p50_us"]
+        snaps[label] = snap
+        out.append(csv_row(
+            f"serve_cache_{label}", q["mean_us"],
+            "p50_us=%.1f;p99_us=%.1f;hit_rate=%.3f"
+            % (q["p50_us"], q["p99_us"], snap.cache_hit_rate)))
+    assert snaps["on"].cache_hit_rate > 0.5, "hot trace barely hit"
+    assert p50["on"] < p50["off"], (
+        f"cache did not cut p50: on={p50['on']:.1f}us off={p50['off']:.1f}us")
+    publish_summary(
+        "serve_cache", p50_on_us=round(p50["on"], 1),
+        p50_off_us=round(p50["off"], 1),
+        p50_cut=round(1.0 - p50["on"] / p50["off"], 4),
+        hit_rate=round(snaps["on"].cache_hit_rate, 4))
+
+    # -- compile audit: a handful of shapes for the whole ragged run ---
+    palette_bound = 6 * 6  # b,k ladders ≤ 2^5=32 → 6 rungs each
+    assert compile_misses_total <= palette_bound, (
+        f"{compile_misses_total} compiles exceeds palette {palette_bound}")
+    out.append(csv_row("serve_compiles", 0.0,
+                       "closed_loop_compiles=%d;palette_bound=%d"
+                       % (compile_misses_total, palette_bound)))
+    publish_summary("serve_compiles",
+                    closed_loop_compiles=compile_misses_total,
+                    palette_bound=palette_bound)
+    return out

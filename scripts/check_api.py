@@ -20,8 +20,14 @@ A CP conformance gate keeps the "cp" capability honest: every backend
 advertising it must return SORTED, EXACT-VERIFIED pairs (ascending
 distances that match a recomputation from the raw rows, i < j, no
 duplicates, full recall of the unambiguous seeded closest pair) with
-weakly k-monotone WorkStats pair accounting.  Exits non-zero on the
-first violation.
+weakly k-monotone WorkStats pair accounting.
+
+A serve conformance gate runs the request scheduler (DESIGN.md §11)
+over a ragged mixed-k trace against a streaming datastore: every ok
+response must match a direct facade search, shed accounting must sum
+to the submitted count, compile counters must match the executed shape
+set, and the SQ8 hot-query cache must invalidate across extend/evict.
+Exits non-zero on the first violation.
 
     PYTHONPATH=src python scripts/check_api.py
 """
@@ -143,6 +149,79 @@ def check_quant(data, queries, rng) -> None:
           f"padding, streaming-quant]")
 
 
+def check_serve(data, rng) -> None:
+    """Serve gate (DESIGN.md §11): submit→response correctness under
+    ragged traffic, shed accounting summing to the submitted count, and
+    cache invalidation across streaming mutations."""
+    from repro.index import IndexConfig
+    from repro.serve import RequestScheduler, ServeConfig
+    from repro.serve.serve_step import make_retrieval_step
+
+    step, _ = make_retrieval_step(
+        data, np.arange(len(data)), k=8,
+        index_config=IndexConfig(backend="streaming", seed=0,
+                                 options={"delta_threshold": 64}))
+    # cache OFF for the correctness trace: the SQ8 cache intentionally
+    # answers near-duplicate queries (same grid cell) from one entry,
+    # which is approximation by design, not a routing bug
+    sched = RequestScheduler(step, config=ServeConfig(
+        b_max=8, k_max=16, max_queue=6, watermark=0.5, cache=False,
+        shed_policy="shed", default_deadline_ms=1e6))
+
+    # ragged trace: mixed k, bursty submits, occasional drains — every
+    # ok response must answer ITS query exactly as a direct facade
+    # search at the bucket's padded k would
+    trace = []
+    for i in range(120):
+        kq = int(rng.choice([1, 3, 5, 12]))
+        q = (data[int(rng.integers(0, len(data)))]
+             + rng.normal(size=data.shape[1]).astype(np.float32) * 0.01)
+        trace.append((q, kq, sched.submit(q, k=kq)))
+        if i % 9 == 8:
+            sched.drain()
+    sched.drain()
+    ok = shed = 0
+    for q, kq, t in trace:
+        resp = t.result()
+        if resp.status == "shed":
+            shed += 1
+            continue
+        ok += 1
+        assert resp.result.indices.shape == (1, kq), resp.result.indices.shape
+        assert resp.valid.shape == (1, kq)
+        assert np.isfinite(resp.distances).all(), "unneutralized padding"
+        direct = step.index.search(q[None], sched.palette.k_pad(kq))
+        np.testing.assert_array_equal(
+            resp.result.indices, direct.indices[:, :kq],
+            err_msg="scheduler response != direct facade search")
+    snap = sched.snapshot()
+    assert ok + shed == len(trace), "lost a ticket"
+    assert snap.submitted == snap.completed + snap.shed == len(trace), (
+        f"shed accounting broken: {snap.submitted} submitted, "
+        f"{snap.completed} completed, {snap.shed} shed")
+    assert snap.compile_misses == len(sched.compile_shapes), (
+        "compile counter diverged from executed shapes")
+
+    # cache invalidation across extend/evict (streaming mutation) — a
+    # fresh scheduler with the cache on
+    sched = RequestScheduler(step, config=ServeConfig(
+        b_max=8, default_deadline_ms=1e6))
+    probe = np.full((data.shape[1],), 29.0, np.float32)
+    sched.submit(probe, k=2).result()
+    assert sched.submit(probe, k=2).result().cached, "hot query missed"
+    ids = sched.extend(probe[None], [4242])
+    post = sched.submit(probe, k=2).result()
+    assert not post.cached, "cache served across extend"
+    assert post.result.indices[0, 0] == ids[0], "fresh insert not returned"
+    sched.evict(ids)
+    gone = sched.submit(probe, k=2).result()
+    assert not gone.cached, "cache served across evict"
+    assert ids[0] not in gone.result.indices, "tombstoned id returned"
+    print(f"  ok   serve gate    [ragged {len(trace)}-req trace: "
+          f"{ok} ok / {shed} shed, {snap.compile_misses} compiles, "
+          "cache invalidation]")
+
+
 def check_cp(data, rng) -> None:
     """Capability-honest CP gate over every backend advertising "cp"."""
     from repro.index import IndexConfig, available_backends, build_index
@@ -258,11 +337,17 @@ def main() -> int:
         failures.append("cp-gate")
         print(f"  FAIL cp gate       {type(e).__name__}: {e}")
 
+    try:
+        check_serve(data, rng)
+    except Exception as e:  # noqa: BLE001
+        failures.append("serve-gate")
+        print(f"  FAIL serve gate    {type(e).__name__}: {e}")
+
     if failures:
         print(f"check_api: FAILED for {failures}")
         return 1
     print(f"check_api: all {len(available_backends())} backends conform "
-          "+ quant gate + cp gate")
+          "+ quant gate + cp gate + serve gate")
     return 0
 
 

@@ -1,0 +1,69 @@
+"""repro.serve — the serving front end over the ``repro.index`` facade.
+
+Two layers:
+
+  * ``serve_step`` — per-call building blocks: :class:`RetrievalStep`
+    (one batched facade search + payload gather, with streaming
+    ``extend``/``evict``) and the model prefill/decode steps.
+  * the request scheduler — :class:`RequestScheduler` turns ragged
+    production traffic (variable B, mixed k, bursts, interleaved
+    inserts) into the padded jit-stable shapes the fused pipeline is
+    fast at: continuous batching over a powers-of-two (B_pad, k_pad)
+    bucket palette with deadline-aware flushes (``batcher``), an LRU
+    hot-query cache keyed on SQ8 codes (``cache``), admission control
+    with watermark degrade/shed (``admission``), and a full metrics
+    surface — p50/p99, QPS, hit/shed rates, padding overhead, compile
+    counters (``metrics``).  DESIGN.md §11.
+
+Quickstart::
+
+    from repro.serve import RequestScheduler, ServeConfig
+    from repro.serve.serve_step import make_retrieval_step
+
+    step, index = make_retrieval_step(keys, values, k=10)
+    sched = RequestScheduler(step, config=ServeConfig(b_max=32))
+    t = sched.submit(q, k=10, deadline_ms=5.0)
+    sched.pump()                      # serving-loop tick
+    resp = t.result()                 # (1, k) SearchResult + payloads
+    sched.snapshot()                  # p50/p99/QPS/hit-rate/shed-rate
+
+``make_prefill`` / ``make_decode_step`` / ``make_retrieval_step`` stay
+importable from ``repro.serve.serve_step`` (they pull in the model
+stack, so they load lazily here).
+"""
+from .admission import ADMIT, DEGRADE, SHED, AdmissionController  # noqa: F401
+from .batcher import BucketPalette, StagingBuffers, pow2_ceil  # noqa: F401
+from .cache import SQ8QueryCache  # noqa: F401
+from .metrics import (  # noqa: F401
+    BucketSnapshot,
+    MetricsSnapshot,
+    ServeMetrics,
+)
+from .scheduler import (  # noqa: F401
+    RequestScheduler,
+    Response,
+    ServeConfig,
+    Ticket,
+)
+
+_LAZY = ("RetrievalStep", "make_retrieval_step", "make_prefill",
+         "make_decode_step")
+
+__all__ = [
+    "ADMIT", "DEGRADE", "SHED", "AdmissionController",
+    "BucketPalette", "StagingBuffers", "pow2_ceil",
+    "SQ8QueryCache",
+    "BucketSnapshot", "MetricsSnapshot", "ServeMetrics",
+    "RequestScheduler", "Response", "ServeConfig", "Ticket",
+    *_LAZY,
+]
+
+
+def __getattr__(name: str):
+    # serve_step imports the model/sharding stack — keep the scheduler
+    # path importable without it
+    if name in _LAZY:
+        from . import serve_step
+
+        return getattr(serve_step, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

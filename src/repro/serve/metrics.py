@@ -1,0 +1,203 @@
+"""ServeMetrics — the scheduler's observability surface.
+
+One mutable accumulator (``ServeMetrics``) records every event the
+request path emits — submissions, cache hits/misses, shed and degraded
+requests, per-bucket flushes with real vs. padded slot counts,
+compile-cache hits/misses, per-request latencies — plus the summed
+``WorkStats`` of every index call.  ``snapshot()`` freezes the current
+state into an immutable :class:`MetricsSnapshot` with the derived
+serving numbers: p50/p99 latency (overall and per bucket shape), QPS,
+cache hit rate, shed rate, and padding overhead (padded slots that
+carried no real query).
+
+Accounting invariant (asserted by the serve conformance gate in
+scripts/check_api.py): ``submitted == completed + shed + pending`` —
+every submitted request is exactly one of answered, shed, or still
+queued.  Cache hits complete without a flush, so they appear in
+``completed`` but in no bucket's slot counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.index.types import WorkStats
+
+__all__ = ["BucketSnapshot", "MetricsSnapshot", "ServeMetrics"]
+
+
+def _quantiles_us(samples: list[float]) -> tuple[float, float]:
+    if not samples:
+        return 0.0, 0.0
+    s = np.asarray(samples, np.float64) * 1e6
+    return float(np.percentile(s, 50)), float(np.percentile(s, 99))
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketSnapshot:
+    """Per-(B_pad, k_pad) serving numbers at snapshot time."""
+
+    shape: tuple[int, int]  # (B_pad, k_pad)
+    flushes: int
+    real_slots: int  # slots that carried a live request
+    padded_slots: int  # B_pad summed over flushes
+    p50_us: float
+    p99_us: float
+
+    @property
+    def padding_overhead(self) -> float:
+        """Fraction of executed slots that were padding."""
+        if self.padded_slots == 0:
+            return 0.0
+        return 1.0 - self.real_slots / self.padded_slots
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricsSnapshot:
+    """Immutable view of the serving counters + derived rates."""
+
+    submitted: int
+    completed: int
+    shed: int
+    degraded: int
+    pending: int
+    cache_hits: int
+    cache_misses: int
+    compile_hits: int
+    compile_misses: int
+    deadline_flushes: int
+    full_flushes: int
+    forced_flushes: int
+    staging_reuses: int
+    queue_depth: int
+    wall_s: float
+    p50_us: float
+    p99_us: float
+    buckets: tuple[BucketSnapshot, ...]
+    work: WorkStats
+
+    @property
+    def qps(self) -> float:
+        return self.completed / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        looked = self.cache_hits + self.cache_misses
+        return self.cache_hits / looked if looked else 0.0
+
+    @property
+    def shed_rate(self) -> float:
+        return self.shed / self.submitted if self.submitted else 0.0
+
+    @property
+    def degraded_rate(self) -> float:
+        return self.degraded / self.submitted if self.submitted else 0.0
+
+    @property
+    def padding_overhead(self) -> float:
+        """Executed-but-empty slot fraction, over every flushed bucket."""
+        real = sum(b.real_slots for b in self.buckets)
+        padded = sum(b.padded_slots for b in self.buckets)
+        return 1.0 - real / padded if padded else 0.0
+
+    @property
+    def compile_rate(self) -> float:
+        """Compiles per flush — ≈0 once the palette is warm."""
+        flushes = sum(b.flushes for b in self.buckets)
+        return self.compile_misses / flushes if flushes else 0.0
+
+
+class ServeMetrics:
+    """Mutable serving-counter accumulator (one per scheduler)."""
+
+    def __init__(self, clock):
+        self._clock = clock
+        self._t0: float | None = None  # first submit
+        self.submitted = 0
+        self.completed = 0
+        self.shed = 0
+        self.degraded = 0
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.compile_hits = 0
+        self.compile_misses = 0
+        self.deadline_flushes = 0
+        self.full_flushes = 0
+        self.forced_flushes = 0
+        self.staging_reuses = 0
+        self.work = WorkStats()
+        # per-(B_pad, k_pad): [flushes, real_slots, padded_slots, [lat_s]]
+        self._buckets: dict[tuple[int, int], list] = {}
+        self._latencies: list[float] = []
+
+    # -- event recorders -------------------------------------------------
+
+    def on_submit(self, n: int = 1) -> None:
+        if self._t0 is None:
+            self._t0 = self._clock()
+        self.submitted += n
+
+    def on_shed(self) -> None:
+        self.shed += 1
+
+    def on_cache_hit(self, latency_s: float) -> None:
+        self.cache_hits += 1
+        self.completed += 1
+        self._latencies.append(latency_s)
+
+    def on_cache_miss(self) -> None:
+        self.cache_misses += 1
+
+    def on_flush(self, shape: tuple[int, int], real: int, *,
+                 reason: str) -> None:
+        rec = self._buckets.setdefault(shape, [0, 0, 0, []])
+        rec[0] += 1
+        rec[1] += real
+        rec[2] += shape[0]
+        counter = {"deadline": "deadline_flushes", "full": "full_flushes",
+                   "forced": "forced_flushes"}[reason]
+        setattr(self, counter, getattr(self, counter) + 1)
+
+    def on_complete(self, shape: tuple[int, int], latency_s: float, *,
+                    degraded: bool = False) -> None:
+        self.completed += 1
+        if degraded:
+            self.degraded += 1
+        self._latencies.append(latency_s)
+        self._buckets.setdefault(shape, [0, 0, 0, []])[3].append(latency_s)
+
+    def on_compile(self, hit: bool) -> None:
+        if hit:
+            self.compile_hits += 1
+        else:
+            self.compile_misses += 1
+
+    def add_work(self, stats: WorkStats) -> None:
+        self.work += stats
+
+    # -- snapshot --------------------------------------------------------
+
+    def snapshot(self, queue_depth: int = 0) -> MetricsSnapshot:
+        wall = 0.0 if self._t0 is None else max(self._clock() - self._t0, 0.0)
+        buckets = []
+        for shape in sorted(self._buckets):
+            flushes, real, padded, lats = self._buckets[shape]
+            p50, p99 = _quantiles_us(lats)
+            buckets.append(BucketSnapshot(shape, flushes, real, padded,
+                                          p50, p99))
+        p50, p99 = _quantiles_us(self._latencies)
+        return MetricsSnapshot(
+            submitted=self.submitted, completed=self.completed,
+            shed=self.shed, degraded=self.degraded,
+            pending=self.submitted - self.completed - self.shed,
+            cache_hits=self.cache_hits, cache_misses=self.cache_misses,
+            compile_hits=self.compile_hits,
+            compile_misses=self.compile_misses,
+            deadline_flushes=self.deadline_flushes,
+            full_flushes=self.full_flushes,
+            forced_flushes=self.forced_flushes,
+            staging_reuses=self.staging_reuses,
+            queue_depth=queue_depth, wall_s=wall, p50_us=p50, p99_us=p99,
+            buckets=tuple(buckets), work=self.work,
+        )

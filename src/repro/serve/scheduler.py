@@ -1,0 +1,375 @@
+"""RequestScheduler — the serving front end over a RetrievalStep.
+
+This is the layer that turns ragged production traffic into the
+padded, jit-stable shapes the fused pipeline (DESIGN.md §9) is fast
+at.  One scheduler owns one primary :class:`RetrievalStep` (and
+optionally a cheaper degraded-tier step) and runs the request path:
+
+    submit(q, k, deadline_ms)
+      → SQ8 hot-query cache probe       (hit: answer immediately)
+      → admission decision on queue depth (admit / degrade / shed)
+      → bucket by (k_pad, tier)          (powers-of-two palette)
+    pump() / full bucket
+      → flush: pad to (B_pad, k_pad), stage through double buffers,
+        one facade search, slice per-request responses, fill cache
+    ticket.result()
+      → force-flush the caller's bucket if still pending
+
+Continuous batching: a bucket flushes the moment it is full, OR when
+its oldest request's deadline slack (deadline − EWMA service estimate
+for the shape) runs out — so bursts ride at full width and trickles
+still meet their deadlines.  Every flush shape comes from the fixed
+palette, so jit compiles once per (B_pad, k_pad) for the lifetime of
+the process; the compile-cache hit/miss counters in ``metrics`` make
+that auditable.
+
+Degradation (queue past the watermark): requests route to the
+``degraded_step`` — typically the same keys behind a quant/ADC index
+(``options={"quant": "sq8", "rerank": ...}``), which answers from
+1-byte codes at a fraction of the verify cost — or, when no degraded
+step is configured, are served at a clamped k (a lowered T = βn + k
+candidate budget).  Degraded responses are marked ``degraded=True``
+and never populate the cache.  Past ``max_queue`` requests are shed:
+the ticket resolves with status "shed" and ``backpressure`` is the
+upstream slow-down signal.
+
+The scheduler is single-threaded and cooperative: callers interleave
+``submit`` with ``pump`` (and streaming mutations via the
+cache-invalidating ``extend``/``evict`` wrappers).  Clock injection
+(``clock=``) makes deadline behavior deterministic under test.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.index.types import SearchResult
+
+from .admission import DEGRADE, SHED, AdmissionController
+from .batcher import Bucket, BucketPalette, PendingRequest, StagingBuffers
+from .cache import SQ8QueryCache
+from .metrics import MetricsSnapshot, ServeMetrics
+
+__all__ = ["ServeConfig", "Response", "Ticket", "RequestScheduler"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Scheduler knobs (palette, deadlines, queue, cache, degrade)."""
+
+    b_max: int = 64  # widest padded batch (power of two)
+    k_max: int = 128  # largest padded k (power of two)
+    default_deadline_ms: float = 20.0  # slack budget for un-deadlined submits
+    max_queue: int = 256  # hard admission limit (SHED past this)
+    watermark: float = 0.75  # DEGRADE band starts at watermark·max_queue
+    shed_policy: str = "degrade"  # "degrade" | "shed"
+    cache: bool = True  # SQ8 hot-query cache on the submit path
+    cache_capacity: int = 1024
+    degrade_k: int | None = None  # k clamp when no degraded_step (default k//2)
+    service_ewma_alpha: float = 0.25  # service-time estimate smoothing
+
+
+@dataclasses.dataclass
+class Response:
+    """The terminal state of one submitted request."""
+
+    id: int
+    status: str  # "ok" | "shed"
+    result: SearchResult | None = None  # (1, k_req), facade contract
+    payloads: np.ndarray | None = None  # values gathered for valid slots
+    valid: np.ndarray | None = None  # (1, k_req) bool
+    distances: np.ndarray | None = None  # (1, k_req), 0.0 on invalid slots
+    cached: bool = False
+    degraded: bool = False
+    latency_s: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+
+class Ticket:
+    """Handle to one submitted request; ``result()`` resolves it."""
+
+    __slots__ = ("_scheduler", "id", "_response")
+
+    def __init__(self, scheduler: "RequestScheduler", rid: int,
+                 response: Response | None = None):
+        self._scheduler = scheduler
+        self.id = rid
+        self._response = response
+
+    @property
+    def done(self) -> bool:
+        return self._response is not None or self._scheduler._done(self.id)
+
+    def result(self) -> Response:
+        """The response — force-flushing this request's bucket if it is
+        still queued (the continuous-batching equivalent of a blocking
+        wait)."""
+        if self._response is None:
+            self._response = self._scheduler._resolve(self.id)
+        return self._response
+
+
+class RequestScheduler:
+    """Continuous batching + SQ8 cache + admission over a RetrievalStep."""
+
+    def __init__(self, step, *, config: ServeConfig | None = None,
+                 degraded_step=None,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.step = step
+        self.config = config or ServeConfig()
+        self.degraded_step = degraded_step
+        self.clock = clock
+        self.palette = BucketPalette(self.config.b_max, self.config.k_max)
+        self.metrics = ServeMetrics(clock)
+        self.admission = AdmissionController(
+            max_queue=self.config.max_queue,
+            watermark=self.config.watermark,
+            policy=self.config.shed_policy)
+        self.cache: SQ8QueryCache | None = None
+        if self.config.cache:
+            self.cache = SQ8QueryCache(self.config.cache_capacity)
+            data = getattr(step.index, "data", None)
+            if data is not None and len(data):
+                self.cache.ensure_codec(data)
+        self._buckets: dict[tuple[int, str], Bucket] = {}
+        self._staging: dict[tuple[int, str], StagingBuffers] = {}
+        self._service_ewma: dict[tuple[int, str], float] = {}
+        self._seen_shapes: set[tuple[int, int, str]] = set()
+        self._pending: dict[int, tuple[int, str]] = {}  # id → bucket key
+        self._responses: dict[int, Response] = {}
+        self._next_id = 0
+
+    # -- submission ------------------------------------------------------
+
+    def submit(self, query, k: int | None = None,
+               deadline_ms: float | None = None) -> Ticket:
+        """Enqueue one query; returns a :class:`Ticket` immediately.
+
+        Cache hits and shed requests resolve on the spot; everything
+        else waits in a bucket until a full/deadline/forced flush."""
+        now = self.clock()
+        q = np.asarray(query, np.float32).reshape(-1)
+        if q.size != self.step.index.d:
+            raise ValueError(f"query has d={q.size}, index d="
+                             f"{self.step.index.d}")
+        k = int(k if k is not None else self.step.k)
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        self.metrics.on_submit()
+        rid = self._next_id
+        self._next_id += 1
+
+        cache_key = None
+        if self.cache is not None:
+            # no datastore rows to train on (codes-only index): fall
+            # back to keying off the first query's own grid
+            self.cache.ensure_codec(q.reshape(1, -1))
+            cache_key = self.cache.key(q, k)
+            hit = self.cache.get(cache_key,
+                                 version=getattr(self.step, "version", 0))
+            if hit is not None:
+                resp = self._respond(rid, hit, self.step, cached=True,
+                                     latency_s=self.clock() - now)
+                self._responses.pop(rid, None)  # the ticket carries it
+                self.metrics.on_cache_hit(resp.latency_s)
+                return Ticket(self, rid, resp)
+            self.metrics.on_cache_miss()
+
+        action = self.admission.decide(len(self._pending))
+        if action == SHED:
+            self.metrics.on_shed()
+            resp = Response(rid, "shed", latency_s=self.clock() - now)
+            return Ticket(self, rid, resp)
+
+        tier, k_serve, degraded = "primary", k, False
+        if action == DEGRADE:
+            degraded = True
+            if self.degraded_step is not None:
+                tier = "degraded"
+            else:  # no cheaper tier wired: lower the T = βn + k budget
+                k_serve = max(1, min(k, self.config.degrade_k
+                                     or max(1, k // 2)))
+
+        deadline = now + (deadline_ms if deadline_ms is not None
+                          else self.config.default_deadline_ms) / 1e3
+        k_pad = self.palette.k_pad(k_serve)
+        bkey = (k_pad, tier)
+        bucket = self._buckets.get(bkey)
+        if bucket is None:
+            bucket = self._buckets[bkey] = Bucket(k_pad, tier)
+        bucket.add(PendingRequest(
+            rid, q, k_serve, k, deadline, now,
+            cache_key=None if degraded else cache_key, degraded=degraded))
+        self._pending[rid] = bkey
+        if len(bucket) >= self.config.b_max:
+            self._flush(bkey, reason="full")
+        return Ticket(self, rid)
+
+    def submit_batch(self, queries, k: int | None = None,
+                     deadline_ms: float | None = None) -> list[Ticket]:
+        Q = np.atleast_2d(np.asarray(queries, np.float32))
+        return [self.submit(q, k, deadline_ms) for q in Q]
+
+    def search(self, queries, k: int | None = None) -> SearchResult:
+        """Synchronous convenience: submit a batch, resolve every
+        ticket, reassemble the facade-shaped (B, k) SearchResult.
+        Shed rows come back as all-padding (-1 / +inf)."""
+        k = int(k if k is not None else self.step.k)
+        tickets = self.submit_batch(queries, k)
+        indices = np.full((len(tickets), k), -1, np.int32)
+        distances = np.full((len(tickets), k), np.inf, np.float32)
+        for b, t in enumerate(tickets):
+            resp = t.result()
+            if resp.ok:
+                indices[b] = resp.result.indices[0]
+                distances[b] = resp.result.distances[0]
+        return SearchResult(indices, distances)
+
+    # -- pumping / flushing ----------------------------------------------
+
+    def pump(self, now: float | None = None) -> int:
+        """Flush every bucket whose deadline slack has expired; returns
+        the number of requests completed.  Call this from the serving
+        loop between submissions (continuous batching's clock tick)."""
+        now = self.clock() if now is None else now
+        completed = 0
+        for bkey in list(self._buckets):
+            bucket = self._buckets[bkey]
+            if bucket.due(now, self._service_ewma.get(bkey, 0.0)):
+                completed += self._flush(bkey, reason="deadline")
+        return completed
+
+    def drain(self) -> int:
+        """Flush everything now (shutdown / end-of-trace)."""
+        completed = 0
+        for bkey in list(self._buckets):
+            completed += self._flush(bkey, reason="forced")
+        return completed
+
+    def _flush(self, bkey: tuple[int, str], reason: str) -> int:
+        bucket = self._buckets[bkey]
+        reqs = bucket.take_all()
+        if not reqs:
+            return 0
+        k_pad, tier = bkey
+        step = self.degraded_step if tier == "degraded" else self.step
+        b_pad = self.palette.b_pad(len(reqs))
+        shape = (b_pad, k_pad)
+        self.metrics.on_flush(shape, real=len(reqs), reason=reason)
+        self.metrics.on_compile(hit=(b_pad, k_pad, tier) in self._seen_shapes)
+        self._seen_shapes.add((b_pad, k_pad, tier))
+
+        skey = (b_pad, tier)
+        staging = self._staging.get(skey)
+        if staging is None:
+            staging = self._staging[skey] = StagingBuffers(b_pad,
+                                                           step.index.d)
+        Q = staging.stage([r.query for r in reqs])
+        if staging.reuses > 0:
+            self.metrics.staging_reuses += 1
+
+        t0 = self.clock()
+        res = step.index.search(Q, k=k_pad)
+        dt = self.clock() - t0
+        alpha = self.config.service_ewma_alpha
+        prev = self._service_ewma.get(bkey)
+        self._service_ewma[bkey] = (dt if prev is None
+                                    else alpha * dt + (1 - alpha) * prev)
+        self.metrics.add_work(res.stats)
+
+        version = getattr(step, "version", 0)
+        done_t = self.clock()
+        for i, r in enumerate(reqs):
+            sub = SearchResult(res.indices[i: i + 1, : r.k].copy(),
+                               res.distances[i: i + 1, : r.k].copy())
+            if r.k_req > r.k:  # degraded k clamp: pad back to requested k
+                pad_i = np.full((1, r.k_req), -1, np.int32)
+                pad_d = np.full((1, r.k_req), np.inf, np.float32)
+                pad_i[:, : r.k] = sub.indices
+                pad_d[:, : r.k] = sub.distances
+                sub = SearchResult(pad_i, pad_d)
+            latency = done_t - r.submit_t
+            resp = self._respond(r.id, sub, step, degraded=r.degraded,
+                                 latency_s=latency)
+            self._pending.pop(r.id, None)
+            self.metrics.on_complete(shape, latency, degraded=r.degraded)
+            if self.cache is not None and r.cache_key is not None:
+                self.cache.put(r.cache_key, sub, version=version)
+        return len(reqs)
+
+    def _respond(self, rid: int, sub: SearchResult, step, *,
+                 cached: bool = False, degraded: bool = False,
+                 latency_s: float = 0.0) -> Response:
+        valid = sub.indices >= 0
+        payloads = step.values[np.where(valid, sub.indices, 0)]
+        distances = np.where(valid, sub.distances,
+                             np.float32(0.0)).astype(np.float32)
+        resp = Response(rid, "ok", result=sub, payloads=payloads,
+                        valid=valid, distances=distances, cached=cached,
+                        degraded=degraded, latency_s=latency_s)
+        self._responses[rid] = resp
+        return resp
+
+    # -- ticket resolution ----------------------------------------------
+
+    def _done(self, rid: int) -> bool:
+        return rid in self._responses
+
+    def _resolve(self, rid: int) -> Response:
+        if rid not in self._responses:
+            bkey = self._pending.get(rid)
+            if bkey is None:
+                raise KeyError(f"unknown request id {rid}")
+            self._flush(bkey, reason="forced")
+        return self._responses.pop(rid)
+
+    # -- streaming mutations (cache-invalidating) ------------------------
+
+    def extend(self, new_keys, new_values):
+        """``RetrievalStep.extend`` + hot-query cache invalidation —
+        cached results may name pre-insert neighbors."""
+        ids = self.step.extend(new_keys, new_values)
+        if self.cache is not None:
+            self.cache.invalidate()
+        return ids
+
+    def evict(self, ids) -> int:
+        """``RetrievalStep.evict`` + hot-query cache invalidation —
+        cached results may name tombstoned rows."""
+        n = self.step.evict(ids)
+        if self.cache is not None:
+            self.cache.invalidate()
+        return n
+
+    # -- introspection ---------------------------------------------------
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._pending)
+
+    @property
+    def backpressure(self) -> bool:
+        """True while queue depth sits past the admission watermark —
+        the signal upstream producers should poll to slow down."""
+        return self.queue_depth >= self.admission.watermark_depth
+
+    @property
+    def compile_shapes(self) -> set[tuple[int, int, str]]:
+        """(B_pad, k_pad, tier) shapes executed so far — its size is
+        the jit-compile count this scheduler has induced."""
+        return set(self._seen_shapes)
+
+    def snapshot(self) -> MetricsSnapshot:
+        return self.metrics.snapshot(queue_depth=self.queue_depth)
+
+    def __repr__(self) -> str:
+        return (f"RequestScheduler(pending={self.queue_depth}, "
+                f"shapes={len(self._seen_shapes)}, "
+                f"cache={'on' if self.cache else 'off'}, "
+                f"degraded_tier={'on' if self.degraded_step else 'off'})")

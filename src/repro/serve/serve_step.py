@@ -10,7 +10,17 @@ kNN-LM retrieval (`make_retrieval_step`) goes through the
 ``repro.index`` facade: the datastore backend (flat on one device,
 sharded across a mesh, streaming for online growth, or any registered
 algorithm) is an IndexConfig field, not a code path.  Results carry an
-explicit validity mask — padded (-1) slots never alias row 0's payload.
+explicit validity mask — padded (-1) slots never alias row 0's payload,
+and padded distance slots are neutralized to 0.0 so a blend that
+forgets the mask cannot pull +inf/NaN into its weights.
+
+`RetrievalStep` is the per-call building block; ragged production
+traffic (variable batch sizes, mixed k, bursts, interleaved inserts)
+goes through ``repro.serve.RequestScheduler`` (scheduler.py), which
+sits ON TOP of a RetrievalStep: it buckets requests into a fixed
+palette of padded (B, k) shapes, flushes by deadline-aware continuous
+batching, caches repeated queries on their SQ8 codes, and sheds or
+degrades load under backpressure (DESIGN.md §11).
 """
 from __future__ import annotations
 
@@ -71,13 +81,35 @@ class RetrievalStep:
         from repro.index import IndexConfig, build_index
 
         self.k = int(k)
-        self.values = np.asarray(values)
+        values = np.asarray(values)
+        # payload store: geometrically-grown capacity buffer, so
+        # repeated small ``extend`` calls are amortized O(1) instead of
+        # one O(n) concatenate per call
+        self._values_buf = values
+        self._n_values = len(values)
+        self._value_reallocs = 0
+        #: datastore generation — bumped by every extend/evict, so
+        #: result caches keyed on this step (repro.serve.cache) can
+        #: invalidate stale entries
+        self.version = 0
         keys = np.asarray(keys, dtype=np.float32)
-        if len(self.values) != len(keys):
+        if self._n_values != len(keys):
             raise ValueError(
-                f"{len(keys)} keys for {len(self.values)} payloads")
+                f"{len(keys)} keys for {self._n_values} payloads")
         self.index = build_index(keys,
                                  index_config or IndexConfig(backend="flat"))
+
+    @property
+    def values(self):
+        """The live payload rows (a view of the capacity buffer)."""
+        return self._values_buf[: self._n_values]
+
+    @values.setter
+    def values(self, new_values):
+        import numpy as np
+
+        self._values_buf = np.asarray(new_values)
+        self._n_values = len(self._values_buf)
 
     @property
     def streaming(self) -> bool:
@@ -105,7 +137,13 @@ class RetrievalStep:
         res = self.index.search(queries, k=self.k)
         valid = res.indices >= 0
         payload = self.values[np.where(valid, res.indices, 0)]
-        return payload, valid, res.distances, res
+        # invalid slots gather row 0's payload as a placeholder AND get
+        # their distance neutralized to 0.0: the facade pads distances
+        # with +inf, which a downstream blend that forgets the mask
+        # would propagate into NaN weights — zero is inert either way
+        distances = np.where(valid, res.distances, np.float32(0.0)).astype(
+            np.float32)
+        return payload, valid, distances, res
 
     def extend(self, new_keys, new_values):
         """Insert (key → payload) rows into a streaming datastore;
@@ -123,7 +161,21 @@ class RetrievalStep:
             raise ValueError(
                 f"{len(new_keys)} keys for {len(new_values)} payloads")
         ids = self.index.insert(new_keys)
-        self.values = np.concatenate([self.values, new_values], axis=0)
+        need = self._n_values + len(new_values)
+        dtype = np.result_type(self._values_buf, new_values)
+        if dtype != self._values_buf.dtype:  # promote (concat semantics)
+            self._values_buf = self._values_buf.astype(dtype)
+            self._value_reallocs += 1
+        if need > len(self._values_buf):  # geometric growth: amortized O(1)
+            cap = max(need, 2 * len(self._values_buf), 16)
+            buf = np.empty((cap,) + self._values_buf.shape[1:],
+                           dtype=self._values_buf.dtype)
+            buf[: self._n_values] = self._values_buf[: self._n_values]
+            self._values_buf = buf
+            self._value_reallocs += 1
+        self._values_buf[self._n_values:need] = new_values
+        self._n_values = need
+        self.version += 1
         return ids
 
     def evict(self, ids) -> int:
@@ -131,6 +183,7 @@ class RetrievalStep:
         if not self.streaming:
             raise NotImplementedError(
                 f"backend {self.index.backend_name!r} is build-once")
+        self.version += 1
         return self.index.delete(ids)
 
 

@@ -1,0 +1,437 @@
+"""Tests for repro.serve — the request scheduler (DESIGN.md §11).
+
+Covers the ISSUE-6 scheduler contract: bucket routing for mixed-k
+traffic, deadline-before-fill flushes, bit-identical cache hits with
+extend/evict invalidation, watermark backpressure + shed accounting,
+one jit compile per (B_pad, k_pad) shape across a ragged 500-request
+trace, the degrade tiers, and the RetrievalStep satellites (amortized
+O(1) extend, neutralized invalid-slot distances).
+"""
+import numpy as np
+import pytest
+
+from conftest import make_clustered
+
+
+class FakeClock:
+    """Injectable deterministic clock for deadline behavior."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def make_step(n=256, d=16, k=8, backend="flat", **options):
+    from repro.index import IndexConfig
+    from repro.serve.serve_step import make_retrieval_step
+
+    keys = make_clustered(n, d, seed=3)
+    values = np.arange(n)
+    cfg = IndexConfig(backend=backend, seed=0, options=options)
+    step, _ = make_retrieval_step(keys, values, k=k, index_config=cfg)
+    return step, keys
+
+
+# ---------------------------------------------------------------------------
+# palette / batcher
+# ---------------------------------------------------------------------------
+
+
+class TestPalette:
+    def test_pow2_ladder(self):
+        from repro.serve import BucketPalette, pow2_ceil
+
+        assert [pow2_ceil(x) for x in (1, 2, 3, 5, 8, 9)] == [1, 2, 4, 8,
+                                                              8, 16]
+        p = BucketPalette(b_max=8, k_max=16)
+        assert p.k_pad(5) == 8 and p.k_pad(16) == 16 and p.k_pad(1) == 1
+        assert p.b_pad(3) == 4 and p.b_pad(100) == 8  # clamped to b_max
+        assert len(p.shapes) == 4 * 5  # B∈{1,2,4,8} × k∈{1,2,4,8,16}
+        with pytest.raises(ValueError):
+            p.k_pad(17)
+        with pytest.raises(ValueError):
+            BucketPalette(b_max=6)
+
+    def test_mixed_k_buckets(self):
+        """Mixed-k submissions land in the correct k_pad buckets."""
+        from repro.serve import RequestScheduler, ServeConfig
+
+        step, keys = make_step()
+        sched = RequestScheduler(step, config=ServeConfig(
+            b_max=8, k_max=16, cache=False))
+        for i, k in enumerate([3, 9, 1, 4, 16, 2]):
+            sched.submit(keys[i], k=k)
+        sizes = {kp: len(b) for (kp, _), b in sched._buckets.items()}
+        assert sizes == {4: 2, 16: 2, 1: 1, 2: 1}  # 3,4→4; 9,16→16; 1; 2
+        sched.drain()
+        shapes = {b.shape for b in sched.snapshot().buckets}
+        assert shapes == {(2, 4), (1, 1), (2, 16), (1, 2)}
+
+    def test_staging_double_buffer(self):
+        from repro.serve import StagingBuffers
+
+        st = StagingBuffers(4, 3)
+        a = st.stage([np.ones(3, np.float32)])
+        b = st.stage([np.full(3, 2.0, np.float32)])
+        assert a is not b  # alternating buffers: the in-flight batch
+        assert (a[0] == 1.0).all() and (b[0] == 2.0).all()
+        assert (a[1:] == 0).all()  # padding rows zeroed
+        c = st.stage([np.full(3, 3.0, np.float32)])
+        assert c is a and st.reuses == 1  # third fill reuses buffer 0
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+
+
+class TestBatching:
+    def test_full_bucket_flushes_immediately(self):
+        from repro.serve import RequestScheduler, ServeConfig
+
+        step, keys = make_step()
+        sched = RequestScheduler(step, config=ServeConfig(
+            b_max=4, cache=False))
+        tickets = [sched.submit(keys[i], k=5) for i in range(4)]
+        assert all(t.done for t in tickets)  # no pump needed
+        assert sched.snapshot().full_flushes == 1
+
+    def test_deadline_flush_fires_before_fill(self):
+        """A lone request flushes when its slack expires — no fill."""
+        from repro.serve import RequestScheduler, ServeConfig
+
+        clock = FakeClock()
+        step, keys = make_step()
+        sched = RequestScheduler(step, config=ServeConfig(
+            b_max=8, cache=False), clock=clock)
+        t = sched.submit(keys[0], k=5, deadline_ms=5.0)
+        assert sched.pump() == 0 and not t.done  # slack remains
+        clock.advance(0.006)  # past the 5ms deadline
+        assert sched.pump() == 1 and t.done
+        snap = sched.snapshot()
+        assert snap.deadline_flushes == 1 and snap.full_flushes == 0
+        assert snap.buckets[0].shape == (1, 8)  # flushed alone, padded k
+
+    def test_result_forces_flush(self):
+        from repro.serve import RequestScheduler, ServeConfig
+
+        step, keys = make_step()
+        sched = RequestScheduler(step, config=ServeConfig(
+            b_max=8, cache=False))
+        t = sched.submit(keys[7], k=3)
+        resp = t.result()  # blocking wait == forced flush
+        assert resp.ok and resp.payloads[0, 0] == 7
+        assert sched.snapshot().forced_flushes == 1
+
+    def test_responses_route_to_their_requests(self):
+        """Ragged interleaved traffic: every response answers ITS query."""
+        from repro.serve import RequestScheduler, ServeConfig
+
+        rng = np.random.default_rng(1)
+        step, keys = make_step(n=200)
+        sched = RequestScheduler(step, config=ServeConfig(
+            b_max=4, cache=False))
+        ids = rng.integers(0, 200, size=50)
+        tickets = [(i, sched.submit(keys[i] + 1e-4, k=int(rng.integers(1, 9))))
+                   for i in ids]
+        sched.drain()
+        for i, t in tickets:
+            resp = t.result()
+            assert resp.ok
+            assert resp.result.indices[0, 0] == i  # nearest = seed row
+            assert resp.valid.shape == resp.result.indices.shape
+            # neutralized-distance invariant holds on the serve path too
+            assert np.isfinite(resp.distances).all()
+
+    def test_search_convenience_matches_direct(self):
+        from repro.serve import RequestScheduler, ServeConfig
+
+        step, keys = make_step()
+        sched = RequestScheduler(step, config=ServeConfig(cache=False))
+        res = sched.search(keys[:6] + 1e-4, k=8)
+        direct = step.index.search(keys[:6] + 1e-4, k=8)
+        np.testing.assert_array_equal(res.indices, direct.indices)
+        np.testing.assert_allclose(res.distances, direct.distances,
+                                   rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# compile-shape stability
+# ---------------------------------------------------------------------------
+
+
+class TestCompileStability:
+    def test_one_compile_per_shape_on_ragged_trace(self):
+        """500 ragged requests → device calls use only palette shapes,
+        each exactly once per (B_pad, k_pad)."""
+        from repro.serve import RequestScheduler, ServeConfig
+
+        rng = np.random.default_rng(2)
+        step, keys = make_step()
+        seen_calls = []
+        orig_search = step.index.search
+
+        def spying_search(Q, k=None):
+            seen_calls.append((np.atleast_2d(np.asarray(Q)).shape[0], int(k)))
+            return orig_search(Q, k)
+
+        step.index.search = spying_search
+        clock = FakeClock()
+        sched = RequestScheduler(step, config=ServeConfig(
+            b_max=8, k_max=16, cache=False, default_deadline_ms=3.0),
+            clock=clock)
+        for i in range(500):
+            k = int(rng.choice([1, 3, 5, 8, 10, 16]))
+            sched.submit(keys[int(rng.integers(0, len(keys)))], k=k)
+            if i % 7 == 0:
+                clock.advance(0.004)
+                sched.pump()
+        sched.drain()
+        snap = sched.snapshot()
+        assert snap.completed == snap.submitted == 500
+
+        distinct = set(seen_calls)
+        palette = {(b, kp) for b in (1, 2, 4, 8) for kp in (1, 4, 8, 16)}
+        assert distinct <= palette  # only padded palette shapes hit jit
+        # one compile per shape: misses == distinct shapes, the rest hit
+        assert snap.compile_misses == len(distinct) <= len(palette)
+        total_flushes = snap.full_flushes + snap.deadline_flushes + \
+            snap.forced_flushes
+        assert snap.compile_hits == total_flushes - snap.compile_misses
+        assert snap.padding_overhead > 0  # some flushes were partial
+        assert snap.staging_reuses > 0  # double buffers recycled
+
+
+# ---------------------------------------------------------------------------
+# hot-query cache
+# ---------------------------------------------------------------------------
+
+
+class TestCache:
+    def test_hit_is_bit_identical(self):
+        from repro.serve import RequestScheduler, ServeConfig
+
+        step, keys = make_step()
+        sched = RequestScheduler(step, config=ServeConfig(b_max=4))
+        first = sched.submit(keys[3], k=6).result()
+        assert not first.cached
+        second = sched.submit(keys[3], k=6).result()
+        assert second.cached and second.ok
+        np.testing.assert_array_equal(second.result.indices,
+                                      first.result.indices)
+        assert second.result.distances.tobytes() == \
+            first.result.distances.tobytes()  # bit-identical
+        snap = sched.snapshot()
+        assert snap.cache_hits == 1 and snap.cache_hit_rate == 0.5
+
+    def test_near_duplicate_shares_grid_cell(self):
+        """Queries within the SQ8 grid step share one cache entry."""
+        from repro.serve import RequestScheduler, ServeConfig
+
+        step, keys = make_step()
+        sched = RequestScheduler(step, config=ServeConfig(b_max=1))
+        sched.submit(keys[0], k=4).result()
+        scale = np.asarray(sched.cache.codec.scale)
+        nudged = keys[0] + 0.01 * scale.min()  # far below one grid step
+        assert sched.submit(nudged, k=4).result().cached
+
+    def test_distinct_k_distinct_entries(self):
+        from repro.serve import RequestScheduler, ServeConfig
+
+        step, keys = make_step()
+        sched = RequestScheduler(step, config=ServeConfig(b_max=1))
+        sched.submit(keys[0], k=4).result()
+        assert not sched.submit(keys[0], k=5).result().cached
+
+    def test_invalidation_on_extend_and_evict(self):
+        from repro.serve import RequestScheduler, ServeConfig
+
+        step, keys = make_step(backend="streaming", delta_threshold=64)
+        sched = RequestScheduler(step, config=ServeConfig(b_max=1))
+        probe = np.full(keys.shape[1], 23.0, np.float32)
+        stale = sched.submit(probe, k=1).result()
+        assert sched.submit(probe, k=1).result().cached  # warm
+
+        # extend with an exact-match row: cache must not serve the
+        # pre-insert neighbor list
+        ids = sched.extend(probe[None], [9999])
+        fresh = sched.submit(probe, k=1).result()
+        assert not fresh.cached
+        assert fresh.result.indices[0, 0] == ids[0]
+        assert fresh.result.indices[0, 0] != stale.result.indices[0, 0]
+
+        # evict it again: the cached post-insert answer must also die
+        assert sched.submit(probe, k=1).result().cached
+        sched.evict(ids)
+        after = sched.submit(probe, k=1).result()
+        assert not after.cached
+        assert after.result.indices[0, 0] != ids[0]
+
+    def test_version_stamp_guards_out_of_band_mutation(self):
+        """Mutating the step BEHIND the scheduler still invalidates —
+        entries are stamped with RetrievalStep.version."""
+        from repro.serve import RequestScheduler, ServeConfig
+
+        step, keys = make_step(backend="streaming", delta_threshold=64)
+        sched = RequestScheduler(step, config=ServeConfig(b_max=1))
+        sched.submit(keys[0], k=2).result()
+        step.extend(keys[:1] * 50, [777])  # not via the scheduler
+        assert not sched.submit(keys[0], k=2).result().cached
+
+    def test_lru_capacity_bound(self):
+        from repro.serve import SQ8QueryCache
+        from repro.index.types import SearchResult
+        from repro.quant import train_sq8
+
+        rng = np.random.default_rng(0)
+        rows = rng.normal(size=(32, 4)).astype(np.float32)
+        cache = SQ8QueryCache(capacity=8, codec=train_sq8(rows))
+        res = SearchResult(np.zeros((1, 2), np.int32),
+                           np.zeros((1, 2), np.float32))
+        for i in range(20):
+            cache.put(cache.key(rows[i], 2), res)
+        assert len(cache) == 8 and cache.evictions == 12
+        assert cache.get(cache.key(rows[19], 2)) is not None  # newest
+        assert cache.get(cache.key(rows[0], 2)) is None  # evicted
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+
+class TestAdmission:
+    def test_bands(self):
+        from repro.serve import ADMIT, DEGRADE, SHED, AdmissionController
+
+        ctl = AdmissionController(max_queue=10, watermark=0.5)
+        assert ctl.decide(0) == ADMIT and not ctl.backpressure
+        assert ctl.decide(4) == ADMIT
+        assert ctl.decide(5) == DEGRADE and ctl.backpressure
+        assert ctl.decide(10) == SHED
+        shed_only = AdmissionController(max_queue=10, watermark=0.5,
+                                        policy=SHED)
+        assert shed_only.decide(7) == ADMIT  # no degrade band
+        assert shed_only.decide(10) == SHED
+        with pytest.raises(ValueError):
+            AdmissionController(watermark=0.0)
+        with pytest.raises(ValueError):
+            AdmissionController(policy="drop")
+
+    def test_backpressure_and_shed_at_watermark(self):
+        """Un-pumped burst: backpressure at the watermark, shed at the
+        hard limit, and the accounting sums to the submitted count."""
+        from repro.serve import RequestScheduler, ServeConfig
+
+        step, keys = make_step()
+        sched = RequestScheduler(step, config=ServeConfig(
+            b_max=64, max_queue=10, watermark=0.5, shed_policy="shed",
+            cache=False, default_deadline_ms=1e6))
+        tickets = []
+        for i in range(25):
+            tickets.append(sched.submit(keys[i % len(keys)], k=4))
+            if i == 3:
+                assert not sched.backpressure  # depth 4 < 0.5·10
+            if i == 4:
+                assert sched.backpressure  # depth 5 ≥ 0.5·10
+        shed = [t for t in tickets if t.done and t.result().status == "shed"]
+        assert len(shed) == 15  # depth pinned at 10 → the rest shed
+        snap = sched.snapshot()
+        assert snap.shed == 15 and snap.pending == 10
+        assert snap.submitted == snap.completed + snap.shed + snap.pending
+        sched.drain()
+        snap = sched.snapshot()
+        assert snap.completed == 10 and snap.pending == 0
+        assert abs(snap.shed_rate - 15 / 25) < 1e-9
+
+    def test_degrade_routes_to_quant_tier(self):
+        from repro.index import IndexConfig
+        from repro.serve import RequestScheduler, ServeConfig
+        from repro.serve.serve_step import make_retrieval_step
+
+        keys = make_clustered(256, 16, seed=3)
+        step, _ = make_retrieval_step(keys, np.arange(256), k=8)
+        cheap, _ = make_retrieval_step(
+            keys, np.arange(256), k=8,
+            index_config=IndexConfig(backend="flat", seed=0,
+                                     options={"quant": "sq8",
+                                              "rerank": 16}))
+        sched = RequestScheduler(
+            step, degraded_step=cheap,
+            config=ServeConfig(b_max=64, max_queue=8, watermark=0.25,
+                               cache=False, default_deadline_ms=1e6))
+        tickets = [sched.submit(keys[i] + 1e-4, k=4) for i in range(8)]
+        sched.drain()
+        degraded = [t.result() for t in tickets if t.result().degraded]
+        assert len(degraded) == 6  # depth ≥ 2 → degrade band
+        for resp in degraded:
+            assert resp.ok and resp.result.indices.shape == (1, 4)
+        # degraded flushes ran on their own tier (separate compile key)
+        assert any(tier == "degraded" for _, _, tier in sched.compile_shapes)
+        assert sched.snapshot().degraded == 6
+
+    def test_degrade_clamps_k_without_tier(self):
+        """No degraded_step: graceful k clamp (lowered T budget), the
+        response padded back to the requested k."""
+        from repro.serve import RequestScheduler, ServeConfig
+
+        step, keys = make_step()
+        sched = RequestScheduler(step, config=ServeConfig(
+            b_max=64, max_queue=8, watermark=0.25, cache=False,
+            default_deadline_ms=1e6))
+        tickets = [sched.submit(keys[i], k=8) for i in range(6)]
+        sched.drain()
+        degraded = [t.result() for t in tickets if t.result().degraded]
+        assert degraded, "watermark band never engaged"
+        for resp in degraded:
+            assert resp.result.indices.shape == (1, 8)  # contract kept
+            assert resp.valid.sum() == 4  # served at k//2
+            assert (resp.result.indices[0, 4:] == -1).all()
+            assert (resp.distances[0, 4:] == 0.0).all()  # neutralized
+
+
+# ---------------------------------------------------------------------------
+# RetrievalStep satellites
+# ---------------------------------------------------------------------------
+
+
+class TestRetrievalStepSatellites:
+    def test_extend_amortized_growth(self):
+        """Many small extends: O(log) buffer reallocations, not O(calls)."""
+        step, keys = make_step(n=64, backend="streaming",
+                               delta_threshold=32)
+        rng = np.random.default_rng(0)
+        expect = list(range(64))
+        for i in range(100):
+            rows = rng.normal(size=(2, keys.shape[1])).astype(np.float32)
+            step.extend(rows, [1000 + 2 * i, 1001 + 2 * i])
+            expect += [1000 + 2 * i, 1001 + 2 * i]
+        assert len(step.values) == 264
+        np.testing.assert_array_equal(step.values, expect)
+        # geometric growth: ≤ log2(264/64)+pad reallocs for 100 extends
+        assert step._value_reallocs <= 6
+        assert step.version == 100
+
+    def test_values_setter_back_compat(self):
+        step, _ = make_step(n=16)
+        step.values = np.arange(16) * 2
+        assert (step.values == np.arange(16) * 2).all()
+
+    def test_invalid_slots_neutralized(self):
+        from repro.serve.serve_step import make_retrieval_step
+
+        keys = np.eye(3, dtype=np.float32)
+        step, _ = make_retrieval_step(keys, np.array([10, 11, 12]), k=5)
+        payload, valid, dists, res = step(keys[:2])
+        assert valid.sum(axis=1).tolist() == [3, 3]
+        # the invariant pair: raw result keeps +inf padding, the step's
+        # returned distances are 0.0 there — finite either way you blend
+        assert np.isinf(res.distances[~valid]).all()
+        assert (dists[~valid] == 0.0).all()
+        assert np.isfinite(dists).all()
+        assert (payload[~valid] == 10).all()  # row-0 placeholder gather

@@ -322,4 +322,9 @@ class TestServing:
         payload, valid, dists, res = step(keys[:1])
         assert valid[0].sum() == 3  # only 3 rows exist
         assert (res.indices[0][~valid[0]] == -1).all()
-        assert np.isinf(dists[0][~valid[0]]).all()
+        # the raw SearchResult keeps the facade's +inf padding, but the
+        # step neutralizes returned distances to 0.0 on invalid slots —
+        # a blend that forgets the mask must not inherit inf/NaN
+        assert np.isinf(res.distances[0][~valid[0]]).all()
+        assert (dists[0][~valid[0]] == 0.0).all()
+        assert np.isfinite(dists).all()
