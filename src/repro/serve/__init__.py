@@ -32,7 +32,12 @@ importable from ``repro.serve.serve_step`` (they pull in the model
 stack, so they load lazily here).
 """
 from .admission import ADMIT, DEGRADE, SHED, AdmissionController  # noqa: F401
-from .batcher import BucketPalette, StagingBuffers, pow2_ceil  # noqa: F401
+from .batcher import (  # noqa: F401
+    PAD_DISTANCE,
+    BucketPalette,
+    StagingBuffers,
+    pow2_ceil,
+)
 from .cache import SQ8QueryCache  # noqa: F401
 from .metrics import (  # noqa: F401
     BucketSnapshot,
@@ -51,7 +56,7 @@ _LAZY = ("RetrievalStep", "make_retrieval_step", "make_prefill",
 
 __all__ = [
     "ADMIT", "DEGRADE", "SHED", "AdmissionController",
-    "BucketPalette", "StagingBuffers", "pow2_ceil",
+    "BucketPalette", "PAD_DISTANCE", "StagingBuffers", "pow2_ceil",
     "SQ8QueryCache",
     "BucketSnapshot", "MetricsSnapshot", "ServeMetrics",
     "RequestScheduler", "Response", "ServeConfig", "Ticket",

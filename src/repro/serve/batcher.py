@@ -14,9 +14,10 @@ ServeMetrics make that auditable.
 
 A :class:`Bucket` accumulates requests that share a k_pad (and service
 tier) until it is full (``b_max``) or the oldest request's deadline
-slack — deadline minus an EWMA estimate of the shape's service time —
-expires; the scheduler then flushes it at the smallest B_pad that
-fits.  That is continuous batching: a burst flushes at full width
+slack expires — deadline minus a service estimate the scheduler forms
+from a per-slot EWMA of observed flush time scaled by the B_pad the
+bucket would flush at right now; the scheduler then flushes it at the
+smallest B_pad that fits.  That is continuous batching: a burst flushes at full width
 immediately, a trickle flushes alone when its deadline demands.
 
 :class:`StagingBuffers` double-buffers the host side of the
@@ -33,8 +34,15 @@ from typing import Any
 
 import numpy as np
 
-__all__ = ["pow2_ceil", "BucketPalette", "PendingRequest", "Bucket",
-           "StagingBuffers"]
+__all__ = ["PAD_DISTANCE", "pow2_ceil", "BucketPalette", "PendingRequest",
+           "Bucket", "StagingBuffers"]
+
+#: Distance reported for invalid (padded, indices == -1) result slots.
+#: Large-but-finite: under an exp(-d)/softmax(-d) blend an invalid slot
+#: gets weight 0 (like the facade's raw +inf padding), while staying
+#: safe in 0·d expressions where +inf would produce NaN.  Callers must
+#: still mask on ``valid`` — this only bounds the blast radius.
+PAD_DISTANCE = np.float32(np.finfo(np.float32).max)
 
 
 def pow2_ceil(x: int) -> int:

@@ -17,10 +17,15 @@ cache's own generation; the scheduler calls it from its extend/evict
 wrappers, and version-stamped gets refuse stale entries even if a
 caller mutates the step behind the scheduler's back.
 
-The codec is trained once — on the datastore rows when available, else
-on the first queries seen (``ensure_codec``) — and never retrained:
-key stability matters more than key optimality, and a retrain would
-silently orphan every live entry.
+The codec is trained once — on the datastore rows when available
+(``ensure_codec`` refuses degenerate training sets: fewer than two
+rows, or zero spread on every dimension, would collapse the grid so
+far that arbitrarily distant queries share a key) — and never
+retrained: key stability matters more than key optimality, and a
+retrain would silently orphan every live entry.  Without a codec
+(codes-only datastores whose own codec is not SQ8) ``key`` falls back
+to the query's exact float32 bytes, so only bit-identical repeats hit
+— strictly conservative, never wrong.
 """
 from __future__ import annotations
 
@@ -54,9 +59,12 @@ class SQ8QueryCache:
         self._table: OrderedDict[tuple[bytes, int], tuple[int, SearchResult]]
         self._table = OrderedDict()
         if codec is not None:
-            self._adopt(codec)
+            self.adopt(codec)
 
-    def _adopt(self, codec) -> None:
+    def adopt(self, codec) -> None:
+        """Key on an already-trained SQ8 codec (e.g. the one a
+        codes-only datastore trained on its full rows before dropping
+        them).  Must happen before any entries are inserted."""
         self.codec = codec
         # keying runs per submit on the host hot path: mirror the
         # codec's affine grid as numpy so no device dispatch is paid
@@ -70,29 +78,43 @@ class SQ8QueryCache:
 
     def ensure_codec(self, rows: np.ndarray | None) -> bool:
         """Train the SQ8 key codec on ``rows`` if not trained yet.
-        Returns True when a usable codec is in place."""
+        Returns True when a usable codec is in place.
+
+        Refuses degenerate training sets — fewer than two rows, or no
+        spread on any dimension.  ``train_sq8`` clamps zero-range dims
+        to a 1e-12 grid step, so a degenerate codec keys every query by
+        its clipped sign pattern and arbitrarily distant queries
+        collide; better to stay codec-less (exact-bytes keying) than to
+        serve another query's answer as a "hit"."""
         if self.codec is not None:
             return True
         if rows is None:
             return False
         rows = np.asarray(rows, np.float32)
-        if rows.ndim != 2 or rows.shape[0] == 0:
+        if rows.ndim != 2 or rows.shape[0] < 2:
             return False
+        if not (np.ptp(rows, axis=0) > 0).any():
+            return False  # all rows identical: every grid step collapses
         from repro.quant import train_sq8
 
-        self._adopt(train_sq8(rows))
+        self.adopt(train_sq8(rows))
         return True
 
-    def key(self, q: np.ndarray, k: int) -> tuple[bytes, int] | None:
-        """(SQ8 codes bytes, k) for one query row; None if no codec.
-        Pure numpy (round-half-even like the codec's jnp.round), so
-        keying costs microseconds, not a device dispatch."""
-        if self.codec is None:
-            return None
+    def key(self, q: np.ndarray, k: int) -> tuple[bytes, int]:
+        """(SQ8 codes bytes, k) for one query row.  Pure numpy
+        (round-half-even like the codec's jnp.round), so keying costs
+        microseconds, not a device dispatch.
+
+        Without a codec the key is the query's exact float32 bytes —
+        only bit-identical repeats collide.  The two key spaces are
+        prefix-tagged so adopting a codec later can never alias an
+        exact-bytes entry."""
         q = np.asarray(q, np.float32).reshape(-1)
+        if self.codec is None:
+            return b"raw:" + q.tobytes(), int(k)
         v = np.round((q - self._offset) / self._scale)
         codes = np.clip(v, 0, self.codec.V - 1).astype(np.uint8)
-        return codes.tobytes(), int(k)
+        return b"sq8:" + codes.tobytes(), int(k)
 
     # -- lookup / fill ---------------------------------------------------
 

@@ -16,9 +16,11 @@ optionally a cheaper degraded-tier step) and runs the request path:
       → force-flush the caller's bucket if still pending
 
 Continuous batching: a bucket flushes the moment it is full, OR when
-its oldest request's deadline slack (deadline − EWMA service estimate
-for the shape) runs out — so bursts ride at full width and trickles
-still meet their deadlines.  Every flush shape comes from the fixed
+its oldest request's deadline slack runs out — deadline minus the
+service estimate, a per-slot EWMA of observed flush time scaled by the
+B_pad the bucket would flush at right now (so a lone trickle request
+is not costed like the 64-wide burst that last trained the EWMA) — so
+bursts ride at full width and trickles still meet their deadlines.  Every flush shape comes from the fixed
 palette, so jit compiles once per (B_pad, k_pad) for the lifetime of
 the process; the compile-cache hit/miss counters in ``metrics`` make
 that auditable.
@@ -42,6 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import weakref
 from typing import Callable
 
 import numpy as np
@@ -49,7 +52,8 @@ import numpy as np
 from repro.index.types import SearchResult
 
 from .admission import DEGRADE, SHED, AdmissionController
-from .batcher import Bucket, BucketPalette, PendingRequest, StagingBuffers
+from .batcher import (PAD_DISTANCE, Bucket, BucketPalette, PendingRequest,
+                      StagingBuffers)
 from .cache import SQ8QueryCache
 from .metrics import MetricsSnapshot, ServeMetrics
 
@@ -81,7 +85,7 @@ class Response:
     result: SearchResult | None = None  # (1, k_req), facade contract
     payloads: np.ndarray | None = None  # values gathered for valid slots
     valid: np.ndarray | None = None  # (1, k_req) bool
-    distances: np.ndarray | None = None  # (1, k_req), 0.0 on invalid slots
+    distances: np.ndarray | None = None  # (1, k_req); PAD_DISTANCE when invalid
     cached: bool = False
     degraded: bool = False
     latency_s: float = 0.0
@@ -92,9 +96,14 @@ class Response:
 
 
 class Ticket:
-    """Handle to one submitted request; ``result()`` resolves it."""
+    """Handle to one submitted request; ``result()`` resolves it.
 
-    __slots__ = ("_scheduler", "id", "_response")
+    Responses are delivered INTO the ticket when its bucket flushes
+    (the scheduler holds only a weak reference): a caller that drops
+    its ticket drops the response with it, so a pump()-driven server
+    never accumulates undelivered payloads."""
+
+    __slots__ = ("_scheduler", "id", "_response", "__weakref__")
 
     def __init__(self, scheduler: "RequestScheduler", rid: int,
                  response: Response | None = None):
@@ -104,14 +113,16 @@ class Ticket:
 
     @property
     def done(self) -> bool:
-        return self._response is not None or self._scheduler._done(self.id)
+        return self._response is not None
 
     def result(self) -> Response:
         """The response — force-flushing this request's bucket if it is
         still queued (the continuous-batching equivalent of a blocking
         wait)."""
         if self._response is None:
-            self._response = self._scheduler._resolve(self.id)
+            self._scheduler._resolve(self.id)
+        if self._response is None:
+            raise KeyError(f"unknown request id {self.id}")
         return self._response
 
 
@@ -134,16 +145,45 @@ class RequestScheduler:
         self.cache: SQ8QueryCache | None = None
         if self.config.cache:
             self.cache = SQ8QueryCache(self.config.cache_capacity)
-            data = getattr(step.index, "data", None)
-            if data is not None and len(data):
-                self.cache.ensure_codec(data)
+            self._train_cache_codec(step.index)
         self._buckets: dict[tuple[int, str], Bucket] = {}
         self._staging: dict[tuple[int, str], StagingBuffers] = {}
+        # per-SLOT service-time EWMA (flush wall time / B_pad), keyed by
+        # (k_pad, tier); scaled back up by the projected flush width in
+        # pump(), so the estimate transfers across batch widths
         self._service_ewma: dict[tuple[int, str], float] = {}
         self._seen_shapes: set[tuple[int, int, str]] = set()
         self._pending: dict[int, tuple[int, str]] = {}  # id → bucket key
-        self._responses: dict[int, Response] = {}
+        # live tickets awaiting flush, weakly referenced: responses are
+        # delivered into the ticket, and a dropped ticket drops its
+        # response instead of leaking it in a scheduler-side table
+        self._tickets: dict[int, weakref.ref[Ticket]] = {}
         self._next_id = 0
+
+    def _train_cache_codec(self, index) -> None:
+        """Give the cache an SQ8 key codec trained on real datastore
+        rows.  NEVER trained on queries: a single-query training set
+        collapses the grid (per-dim scale clamps to 1e-12) and
+        arbitrarily distant queries collide, serving each other's
+        results.  When no usable rows or codec exist the cache keys on
+        exact query bytes — conservative, never wrong."""
+        if self.cache.ensure_codec(getattr(index, "data", None)):
+            return
+        # codes-only datastore (store_raw=False empties index.data):
+        # reuse the index's OWN SQ8 codec, trained on the full rows
+        # before they were dropped.  A non-SQ8 codec (PQ) falls through.
+        codec = getattr(index, "codec", None)
+        if all(hasattr(codec, a) for a in ("scale", "offset", "V")):
+            self.cache.adopt(codec)
+            return
+        # streaming datastores park their rows in an append-only store
+        # (index.data stays an empty view): train on the live rows
+        live_ids = getattr(index, "live_ids", None)
+        get_vectors = getattr(index, "get_vectors", None)
+        if callable(live_ids) and callable(get_vectors):
+            live = live_ids()
+            if len(live):
+                self.cache.ensure_codec(get_vectors(live))
 
     # -- submission ------------------------------------------------------
 
@@ -167,16 +207,15 @@ class RequestScheduler:
 
         cache_key = None
         if self.cache is not None:
-            # no datastore rows to train on (codes-only index): fall
-            # back to keying off the first query's own grid
-            self.cache.ensure_codec(q.reshape(1, -1))
+            # key() degrades to exact-bytes keying when no codec could
+            # be trained/adopted — never train on the queries themselves
+            # (a single-query grid collapses and distant queries collide)
             cache_key = self.cache.key(q, k)
             hit = self.cache.get(cache_key,
                                  version=getattr(self.step, "version", 0))
             if hit is not None:
                 resp = self._respond(rid, hit, self.step, cached=True,
                                      latency_s=self.clock() - now)
-                self._responses.pop(rid, None)  # the ticket carries it
                 self.metrics.on_cache_hit(resp.latency_s)
                 return Ticket(self, rid, resp)
             self.metrics.on_cache_miss()
@@ -207,9 +246,13 @@ class RequestScheduler:
             rid, q, k_serve, k, deadline, now,
             cache_key=None if degraded else cache_key, degraded=degraded))
         self._pending[rid] = bkey
+        # the ticket must exist (and be registered) before a full-bucket
+        # flush runs, or its response would be delivered to nobody
+        ticket = Ticket(self, rid)
+        self._tickets[rid] = weakref.ref(ticket)
         if len(bucket) >= self.config.b_max:
             self._flush(bkey, reason="full")
-        return Ticket(self, rid)
+        return ticket
 
     def submit_batch(self, queries, k: int | None = None,
                      deadline_ms: float | None = None) -> list[Ticket]:
@@ -241,7 +284,12 @@ class RequestScheduler:
         completed = 0
         for bkey in list(self._buckets):
             bucket = self._buckets[bkey]
-            if bucket.due(now, self._service_ewma.get(bkey, 0.0)):
+            # per-slot EWMA × the width THIS bucket would flush at now:
+            # a lone request is not costed like the wide burst that
+            # last trained the estimate (and vice versa)
+            est = (self._service_ewma.get(bkey, 0.0)
+                   * self.palette.b_pad(len(bucket)))
+            if bucket.due(now, est):
                 completed += self._flush(bkey, reason="deadline")
         return completed
 
@@ -276,7 +324,9 @@ class RequestScheduler:
 
         t0 = self.clock()
         res = step.index.search(Q, k=k_pad)
-        dt = self.clock() - t0
+        # normalize to per-slot time so the estimate transfers across
+        # batch widths (pump() scales it back up by the projected B_pad)
+        dt = (self.clock() - t0) / b_pad
         alpha = self.config.service_ewma_alpha
         prev = self._service_ewma.get(bkey)
         self._service_ewma[bkey] = (dt if prev is None
@@ -301,6 +351,12 @@ class RequestScheduler:
             self.metrics.on_complete(shape, latency, degraded=r.degraded)
             if self.cache is not None and r.cache_key is not None:
                 self.cache.put(r.cache_key, sub, version=version)
+            # deliver into the live ticket; a dropped ticket means the
+            # caller walked away — the response is dropped with it
+            tref = self._tickets.pop(r.id, None)
+            ticket = tref() if tref is not None else None
+            if ticket is not None:
+                ticket._response = resp
         return len(reqs)
 
     def _respond(self, rid: int, sub: SearchResult, step, *,
@@ -308,26 +364,23 @@ class RequestScheduler:
                  latency_s: float = 0.0) -> Response:
         valid = sub.indices >= 0
         payloads = step.values[np.where(valid, sub.indices, 0)]
+        # invalid slots: PAD_DISTANCE (large finite) — weight ~0 under
+        # an exp(-d) blend, NaN-safe in 0·d expressions; see batcher
         distances = np.where(valid, sub.distances,
-                             np.float32(0.0)).astype(np.float32)
-        resp = Response(rid, "ok", result=sub, payloads=payloads,
+                             PAD_DISTANCE).astype(np.float32)
+        return Response(rid, "ok", result=sub, payloads=payloads,
                         valid=valid, distances=distances, cached=cached,
                         degraded=degraded, latency_s=latency_s)
-        self._responses[rid] = resp
-        return resp
 
     # -- ticket resolution ----------------------------------------------
 
-    def _done(self, rid: int) -> bool:
-        return rid in self._responses
-
-    def _resolve(self, rid: int) -> Response:
-        if rid not in self._responses:
-            bkey = self._pending.get(rid)
-            if bkey is None:
-                raise KeyError(f"unknown request id {rid}")
-            self._flush(bkey, reason="forced")
-        return self._responses.pop(rid)
+    def _resolve(self, rid: int) -> None:
+        """Force-flush the bucket holding ``rid``; the flush delivers
+        the response into the (live) ticket that is asking."""
+        bkey = self._pending.get(rid)
+        if bkey is None:
+            raise KeyError(f"unknown request id {rid}")
+        self._flush(bkey, reason="forced")
 
     # -- streaming mutations (cache-invalidating) ------------------------
 

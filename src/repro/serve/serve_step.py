@@ -11,8 +11,10 @@ kNN-LM retrieval (`make_retrieval_step`) goes through the
 sharded across a mesh, streaming for online growth, or any registered
 algorithm) is an IndexConfig field, not a code path.  Results carry an
 explicit validity mask — padded (-1) slots never alias row 0's payload,
-and padded distance slots are neutralized to 0.0 so a blend that
-forgets the mask cannot pull +inf/NaN into its weights.
+and padded distance slots are neutralized to the large-but-finite
+``PAD_DISTANCE`` sentinel: weight ~0 under an exp(-d)/softmax(-d)
+blend (like the facade's raw +inf padding) without the NaN hazard +inf
+carries in 0·d expressions.
 
 `RetrievalStep` is the per-call building block; ragged production
 traffic (variable batch sizes, mixed k, bursts, interleaved inserts)
@@ -32,6 +34,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.launch.sharding import batch_shardings, cache_shardings, param_shardings
 from repro.models import model_module
+from repro.serve.batcher import PAD_DISTANCE
 
 
 class RetrievalStep:
@@ -138,10 +141,12 @@ class RetrievalStep:
         valid = res.indices >= 0
         payload = self.values[np.where(valid, res.indices, 0)]
         # invalid slots gather row 0's payload as a placeholder AND get
-        # their distance neutralized to 0.0: the facade pads distances
-        # with +inf, which a downstream blend that forgets the mask
-        # would propagate into NaN weights — zero is inert either way
-        distances = np.where(valid, res.distances, np.float32(0.0)).astype(
+        # their distance set to PAD_DISTANCE (large finite): under an
+        # exp(-d)/softmax(-d) blend that slot's weight is ~0 — the same
+        # masking the facade's raw +inf gives — but without +inf's NaN
+        # hazard in 0·d expressions.  NOT inert under arbitrary blends:
+        # callers must still mask on `valid`.
+        distances = np.where(valid, res.distances, PAD_DISTANCE).astype(
             np.float32)
         return payload, valid, distances, res
 

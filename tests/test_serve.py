@@ -26,6 +26,15 @@ class FakeClock:
         self.t += dt
 
 
+class TickingClock(FakeClock):
+    """Advances a fixed step on every read — gives flushes a nonzero,
+    deterministic wall time."""
+
+    def __call__(self) -> float:
+        self.t += 0.002
+        return self.t
+
+
 def make_step(n=256, d=16, k=8, backend="flat", **options):
     from repro.index import IndexConfig
     from repro.serve.serve_step import make_retrieval_step
@@ -147,6 +156,58 @@ class TestBatching:
             assert resp.valid.shape == resp.result.indices.shape
             # neutralized-distance invariant holds on the serve path too
             assert np.isfinite(resp.distances).all()
+
+    def test_dropped_tickets_do_not_leak_responses(self):
+        """Responses are delivered into live tickets (weakly held):
+        a pump()-driven server whose callers drop tickets must not
+        accumulate completed payloads for the process lifetime."""
+        import gc
+
+        from repro.serve import RequestScheduler, ServeConfig
+
+        step, keys = make_step()
+        sched = RequestScheduler(step, config=ServeConfig(
+            b_max=4, cache=False))
+        for i in range(8):
+            sched.submit(keys[i], k=4)  # ticket dropped immediately
+        gc.collect()
+        sched.drain()
+        assert sched.queue_depth == 0
+        assert not sched._tickets  # nothing retained scheduler-side
+        assert sched.snapshot().completed == 8  # work still accounted
+
+    def test_service_estimate_scales_with_flush_width(self):
+        """The EWMA is per-slot: a wide flush must not inflate the
+        deadline estimate of a lone trickle request (and fire its
+        deadline flush absurdly early)."""
+        from repro.serve import RequestScheduler, ServeConfig
+
+        clock = FakeClock()
+        step, keys = make_step()
+        sched = RequestScheduler(step, config=ServeConfig(
+            b_max=8, cache=False), clock=clock)
+        # as if a width-8 flush took 32ms: 4ms per slot
+        sched._service_ewma[(8, "primary")] = 0.004
+        t = sched.submit(keys[0], k=8, deadline_ms=10.0)
+        # lone request → B_pad=1 → estimate 4ms; 0+4 < 10: slack left.
+        # (a total-time estimate of 32ms would have flushed right here)
+        assert sched.pump() == 0 and not t.done
+        clock.advance(0.007)  # 7ms + 4ms ≥ 10ms deadline
+        assert sched.pump() == 1 and t.done
+
+    def test_flush_updates_per_slot_ewma(self):
+        from repro.serve import RequestScheduler, ServeConfig
+
+        clock = TickingClock()  # every clock read advances 2ms
+        step, keys = make_step()
+        sched = RequestScheduler(step, config=ServeConfig(
+            b_max=4, cache=False), clock=clock)
+        for i in range(4):
+            sched.submit(keys[i], k=4)  # fourth submit: full flush
+        # one clock step elapses inside the timed search; width 4 →
+        # the stored estimate is per-slot, not the flush total
+        assert sched._service_ewma[(4, "primary")] == \
+            pytest.approx(0.002 / 4)
 
     def test_search_convenience_matches_direct(self):
         from repro.serve import RequestScheduler, ServeConfig
@@ -283,6 +344,40 @@ class TestCache:
         step.extend(keys[:1] * 50, [777])  # not via the scheduler
         assert not sched.submit(keys[0], k=2).result().cached
 
+    def test_codes_only_datastore_keys_safely(self):
+        """store_raw=False empties index.data.  The cache must NOT
+        train a codec on a single query (its grid collapses and
+        arbitrarily distant queries collide, serving each other's
+        results); it adopts the index's own SQ8 codec instead."""
+        from repro.serve import RequestScheduler, ServeConfig
+
+        step, keys = make_step(quant="sq8", store_raw=False)
+        assert len(getattr(step.index, "data")) == 0  # codes-only
+        sched = RequestScheduler(step, config=ServeConfig(b_max=1))
+        assert sched.cache.codec is step.index.codec  # trained on rows
+        first = sched.submit(keys[0], k=4).result()
+        far = sched.submit(keys[0] + 9.0, k=4).result()  # ≫ grid step
+        assert not far.cached  # the review's false-hit repro
+        assert sched.submit(keys[0], k=4).result().cached  # repeats hit
+        assert first.result.indices.shape == (1, 4)
+
+    def test_degenerate_codec_refused_exact_bytes_fallback(self):
+        """ensure_codec refuses training sets that would collapse the
+        grid; codec-less keying is exact-bytes, never collides distant
+        queries."""
+        from repro.serve import SQ8QueryCache
+
+        cache = SQ8QueryCache(capacity=8)
+        assert not cache.ensure_codec(None)
+        assert not cache.ensure_codec(np.zeros((1, 4), np.float32))
+        assert not cache.ensure_codec(np.ones((3, 4), np.float32))
+        assert cache.codec is None
+        q = np.zeros(4, np.float32)
+        far = np.full(4, 9.0, np.float32)
+        assert cache.key(q, 2) != cache.key(far, 2)
+        assert cache.key(q, 2) == cache.key(q.copy(), 2)  # exact repeat
+        assert cache.key(q, 2) != cache.key(q, 3)  # k in the key
+
     def test_lru_capacity_bound(self):
         from repro.serve import SQ8QueryCache
         from repro.index.types import SearchResult
@@ -388,11 +483,13 @@ class TestAdmission:
         sched.drain()
         degraded = [t.result() for t in tickets if t.result().degraded]
         assert degraded, "watermark band never engaged"
+        from repro.serve import PAD_DISTANCE
+
         for resp in degraded:
             assert resp.result.indices.shape == (1, 8)  # contract kept
             assert resp.valid.sum() == 4  # served at k//2
             assert (resp.result.indices[0, 4:] == -1).all()
-            assert (resp.distances[0, 4:] == 0.0).all()  # neutralized
+            assert (resp.distances[0, 4:] == PAD_DISTANCE).all()  # neutralized
 
 
 # ---------------------------------------------------------------------------
@@ -423,6 +520,7 @@ class TestRetrievalStepSatellites:
         assert (step.values == np.arange(16) * 2).all()
 
     def test_invalid_slots_neutralized(self):
+        from repro.serve import PAD_DISTANCE
         from repro.serve.serve_step import make_retrieval_step
 
         keys = np.eye(3, dtype=np.float32)
@@ -430,8 +528,13 @@ class TestRetrievalStepSatellites:
         payload, valid, dists, res = step(keys[:2])
         assert valid.sum(axis=1).tolist() == [3, 3]
         # the invariant pair: raw result keeps +inf padding, the step's
-        # returned distances are 0.0 there — finite either way you blend
+        # returned distances carry the large-but-finite PAD_DISTANCE —
+        # weight ~0 under softmax(-d) like +inf, but NaN-safe in 0·d
         assert np.isinf(res.distances[~valid]).all()
-        assert (dists[~valid] == 0.0).all()
+        assert (dists[~valid] == PAD_DISTANCE).all()
         assert np.isfinite(dists).all()
+        # an unmasked softmax(-d) blend must give invalid slots ~0
+        # weight (the review hazard: 0.0 padding gave them MAX weight)
+        w = np.exp(-(dists - dists.min(axis=1, keepdims=True)))
+        assert (w[~valid] == 0.0).all()
         assert (payload[~valid] == 10).all()  # row-0 placeholder gather

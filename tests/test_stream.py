@@ -315,6 +315,7 @@ class TestServing:
         assert 901 not in payload[0][valid[0]]
 
     def test_validity_mask_guards_padding(self):
+        from repro.serve import PAD_DISTANCE
         from repro.serve.serve_step import make_retrieval_step
 
         keys = np.eye(3, dtype=np.float32)
@@ -323,8 +324,9 @@ class TestServing:
         assert valid[0].sum() == 3  # only 3 rows exist
         assert (res.indices[0][~valid[0]] == -1).all()
         # the raw SearchResult keeps the facade's +inf padding, but the
-        # step neutralizes returned distances to 0.0 on invalid slots —
-        # a blend that forgets the mask must not inherit inf/NaN
+        # step neutralizes returned distances to the large-but-finite
+        # PAD_DISTANCE on invalid slots — ~0 weight under an exp(-d)
+        # blend (like +inf) without inf/NaN leaking into 0·d math
         assert np.isinf(res.distances[0][~valid[0]]).all()
-        assert (dists[0][~valid[0]] == 0.0).all()
+        assert (dists[0][~valid[0]] == PAD_DISTANCE).all()
         assert np.isfinite(dists).all()
