@@ -1,6 +1,9 @@
 """Shared helpers for the benchmark harness."""
 from __future__ import annotations
 
+import datetime
+import socket
+import subprocess
 import time
 
 import numpy as np
@@ -8,6 +11,50 @@ import numpy as np
 #: summaries published by benchmark modules during run(); benchmarks.run
 #: drains this into the module's BENCH_<name>.json after each module
 _SUMMARIES: dict[str, dict] = {}
+
+
+def provenance() -> dict:
+    """Where/when/what produced a BENCH file: git SHA, UTC timestamp,
+    jax version, device kind, hostname.  ``benchmarks.run`` stamps
+    this into every BENCH_<module>.json so ``benchmarks.perf_gate``
+    can refuse to compare timings across devices or machines."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        sha = "unknown"
+    try:
+        import jax
+
+        jax_version = jax.__version__
+    except Exception:
+        jax_version = "unavailable"
+    from repro.obs import roofline
+
+    return {
+        "git_sha": sha,
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "jax_version": jax_version,
+        "device_kind": roofline.device_kind(),
+        "hostname": socket.gethostname(),
+    }
+
+
+def trace_probe(name: str, fn, *args, **kw):
+    """Run ``fn`` once under the span tracer and publish its flat
+    per-stage summary (``repro.obs.export.stage_summary``) as summary
+    block ``trace_<name>`` — AFTER the timed loops, so tracing
+    overhead never contaminates the published latencies.  Returns
+    (fn's result, the Trace)."""
+    from repro import obs
+
+    with obs.tracing() as tr:
+        out = fn(*args, **kw)
+    publish_summary(f"trace_{name}", **obs.stage_summary(tr))
+    return out, tr
 
 
 def publish_summary(name: str, **fields) -> None:

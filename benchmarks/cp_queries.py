@@ -24,6 +24,7 @@ from .common import (
     publish_summary,
     timer,
     timer_samples,
+    trace_probe,
 )
 from .datasets import make_dataset
 
@@ -117,6 +118,9 @@ def _fused_engine_rows(quick: bool) -> list[str]:
     assert summary["fused_pairs_verified"] < brute_count, (
         "fused CP verified as many pairs as brute force")
     publish_summary("cp_engine", **summary)
+
+    # stage breakdown: one traced fused CP query after the timed loops
+    trace_probe("fused_cp", index.cp_search, k)
     return out
 
 

@@ -2,14 +2,18 @@
 
 On this CPU container the meaningful numbers are the ORACLE timings
 (XLA:CPU-compiled) plus correctness deltas for the interpret-mode
-kernels; real TPU timings come from the roofline analysis instead.
-`derived` reports effective GB/s of the oracle path and the max |Δ|.
+kernels.  Each timed kernel is also placed on the device roofline via
+``repro.obs.roofline`` — modeled bytes/FLOPs for its shapes against
+the backend's nominal peaks — and a summary block records achieved
+GB/s / GFLOP/s, arithmetic intensity, and the memory-/compute-bound
+classification per kernel.  `derived` reports effective GB/s of the
+oracle path and the max |Δ| of the interpret-mode kernel.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from .common import csv_row, timer
+from .common import csv_row, publish_summary, timer
 
 
 def run(quick: bool = True):
@@ -20,6 +24,13 @@ def run(quick: bool = True):
     from repro.kernels.pairwise_dist import pairwise_sq_dist_pallas
     from repro.kernels.project_dist import project_dist_pallas
     from repro.kernels.topk import topk_smallest_pallas
+    from repro.obs import roofline
+
+    roof: dict[str, dict] = {}
+
+    def place(name, cost, seconds):
+        """Roofline placement of one measured kernel execution."""
+        roof[name] = roofline.achieved(cost, seconds)
 
     out = []
     rng = np.random.default_rng(0)
@@ -40,6 +51,7 @@ def run(quick: bool = True):
     ).max())
     out.append(csv_row("kernel_pairwise_dist", dt * 1e6,
                        "oracle_GBps=%.2f;interp_maxerr=%.1e" % (gbs, delta)))
+    place("pairwise_sq_dist", roofline.pairwise_sq_dist_cost(B, N, d), dt)
 
     # fused project+distance
     qp = q @ a
@@ -52,6 +64,7 @@ def run(quick: bool = True):
     ).max())
     out.append(csv_row("kernel_project_dist", dt2 * 1e6,
                        "interp_maxerr=%.1e" % delta2))
+    place("project_dist", roofline.project_dist_cost(N, d, m, B), dt2)
 
     # top-k
     dmat = ref.pairwise_sq_dist(q, x)
@@ -62,6 +75,7 @@ def run(quick: bool = True):
     wv, _ = ref.topk_smallest(dmat[:4, :512], k)
     out.append(csv_row("kernel_topk", dt3 * 1e6,
                        "interp_maxerr=%.1e" % float(jnp.abs(gv - wv).max())))
+    place("topk_smallest", roofline.topk_cost(B, N, k), dt3)
 
     # SELECT stage: radius-threshold selection at candidate-budget scale
     # (T ≫ 128, where the selection network does not apply) — oracle
@@ -85,6 +99,9 @@ def run(quick: bool = True):
         "kernel_radius_select", dt4 * 1e6,
         "topk_us=%.1f;T=%d;interp_maxerr=%.1e"
         % (dt4t * 1e6, T, float(jnp.abs(gv - wv).max()))))
+    place("radius_select",
+          roofline.radius_select_cost(B, N, min(T + max(256, T // 8), N)),
+          dt4)
 
     # VERIFY stage: gather-free verification — oracle timing plus
     # interpret-mode kernel parity (kernel DMA-gathers row by row, so
@@ -102,4 +119,8 @@ def run(quick: bool = True):
         "kernel_verify_topk", dt5 * 1e6,
         "T=%d;interp_maxerr=%.1e;interp_idx_match=%.2f"
         % (T, float(jnp.abs(gv - wv).max()), idx_ok)))
+    place("verify_topk", roofline.verify_topk_cost(B, T, d, k), dt5)
+
+    publish_summary("kernel_roofline",
+                    peaks=roofline.get_peaks().__dict__, **roof)
     return out

@@ -1,0 +1,241 @@
+"""Perf-regression gate over the committed BENCH trajectory.
+
+    PYTHONPATH=src python -m benchmarks.perf_gate \
+        --baseline-dir <committed BENCH dir> --current-dir <fresh BENCH dir>
+
+Compares every named row's ``us_per_call`` in the current
+``BENCH_<module>.json`` files against the same (module, name) row in
+the baseline set and FAILS (exit 1) when any row regressed by more
+than ``--threshold`` (default 0.25 = +25%).  This turns the committed
+BENCH trajectory from a passive log into an enforced contract: a PR
+that silently doubles fused-query latency fails CI with the exact row
+named.
+
+Guard rails — wall-clock only compares like with like:
+
+  * files carrying a ``provenance`` block are compared only when
+    ``device_kind`` matches; mismatches are SKIPPED (a CPU runner
+    cannot judge TPU numbers).  Hostname mismatches are skipped too
+    unless ``--allow-cross-machine`` — committed baselines usually
+    come from a different box than the CI runner, and cross-machine
+    wall-clock deltas are noise, not regressions.  Legacy files with
+    no provenance block compare unguarded (they predate the stamp).
+  * known/accepted regressions are waived via a JSON allow-list
+    (``--waivers``, default ``benchmarks/perf_waivers.json``):
+    ``{"waivers": [{"module": ..., "name": ..., "reason": ...}]}``.
+    Waived rows are reported but never fail the gate.
+  * rows with non-positive or missing ``us_per_call`` never gate
+    (summary-style rows publish quality numbers, not timings).
+
+``--self-test`` runs the gate against a synthetic 2× regression and a
+clean copy in memory and exits 0 only when it flags the former and
+passes the latter — the CI step that proves the gate itself works.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import glob
+import json
+import os
+import sys
+
+__all__ = ["GateResult", "RowComparison", "load_bench_dir", "compare",
+           "run_gate", "self_test"]
+
+DEFAULT_THRESHOLD = 0.25
+
+
+@dataclasses.dataclass(frozen=True)
+class RowComparison:
+    """One (module, row-name) baseline-vs-current timing comparison."""
+
+    module: str
+    name: str
+    baseline_us: float
+    current_us: float
+    waived: bool = False
+
+    @property
+    def delta(self) -> float:
+        """Fractional change (+0.30 = 30% slower than baseline)."""
+        return self.current_us / max(self.baseline_us, 1e-9) - 1.0
+
+
+@dataclasses.dataclass
+class GateResult:
+    compared: list[RowComparison]
+    regressions: list[RowComparison]  # past threshold, not waived
+    waived: list[RowComparison]  # past threshold but allow-listed
+    skipped: list[str]  # human-readable skip reasons
+
+    @property
+    def ok(self) -> bool:
+        return not self.regressions
+
+
+def load_bench_dir(path: str) -> dict[str, dict]:
+    """{module: payload} for every BENCH_*.json under ``path``."""
+    out = {}
+    for f in sorted(glob.glob(os.path.join(path, "BENCH_*.json"))):
+        try:
+            with open(f) as fh:
+                payload = json.load(fh)
+        except (OSError, json.JSONDecodeError) as e:
+            raise SystemExit(f"perf_gate: cannot load {f}: {e}")
+        module = payload.get("module") or os.path.basename(f)[6:-5]
+        out[module] = payload
+    return out
+
+
+def load_waivers(path: str | None) -> set[tuple[str, str]]:
+    if not path or not os.path.exists(path):
+        return set()
+    with open(path) as fh:
+        data = json.load(fh)
+    return {(w["module"], w["name"]) for w in data.get("waivers", [])}
+
+
+def _rows_by_name(payload: dict) -> dict[str, float]:
+    out = {}
+    for row in payload.get("rows", []):
+        us = row.get("us_per_call")
+        if isinstance(us, (int, float)) and us > 0:
+            out[str(row.get("name"))] = float(us)
+    return out
+
+
+def _comparable(base: dict, cur: dict, module: str, *,
+                allow_cross_machine: bool) -> str | None:
+    """None when the two payloads' timings may be compared; otherwise
+    the skip reason."""
+    bp, cp = base.get("provenance"), cur.get("provenance")
+    if not bp or not cp:
+        return None  # legacy files predate the stamp: compare unguarded
+    if bp.get("device_kind") != cp.get("device_kind"):
+        return (f"{module}: device_kind {bp.get('device_kind')!r} vs "
+                f"{cp.get('device_kind')!r} — cross-device timings skipped")
+    if (not allow_cross_machine
+            and bp.get("hostname") != cp.get("hostname")):
+        return (f"{module}: hostname {bp.get('hostname')!r} vs "
+                f"{cp.get('hostname')!r} — cross-machine timings skipped "
+                "(--allow-cross-machine overrides)")
+    return None
+
+
+def compare(baseline: dict[str, dict], current: dict[str, dict], *,
+            threshold: float = DEFAULT_THRESHOLD,
+            waivers: set[tuple[str, str]] = frozenset(),
+            allow_cross_machine: bool = False) -> GateResult:
+    """Gate ``current`` against ``baseline``; pure, fully in-memory."""
+    res = GateResult([], [], [], [])
+    for module, cur in sorted(current.items()):
+        base = baseline.get(module)
+        if base is None:
+            res.skipped.append(f"{module}: no baseline file")
+            continue
+        reason = _comparable(base, cur, module,
+                             allow_cross_machine=allow_cross_machine)
+        if reason is not None:
+            res.skipped.append(reason)
+            continue
+        base_rows = _rows_by_name(base)
+        for name, cur_us in sorted(_rows_by_name(cur).items()):
+            base_us = base_rows.get(name)
+            if base_us is None:
+                continue  # new row: nothing to regress against
+            cmp = RowComparison(module, name, base_us, cur_us,
+                                waived=(module, name) in waivers)
+            res.compared.append(cmp)
+            if cmp.delta > threshold:
+                (res.waived if cmp.waived else res.regressions).append(cmp)
+    return res
+
+
+def _report(result: GateResult, threshold: float) -> None:
+    print(f"perf_gate: {len(result.compared)} rows compared, "
+          f"threshold +{threshold:.0%}")
+    for reason in result.skipped:
+        print(f"  SKIP {reason}")
+    for c in result.waived:
+        print(f"  WAIVED {c.module}/{c.name}: "
+              f"{c.baseline_us:.1f} → {c.current_us:.1f} us "
+              f"({c.delta:+.1%})")
+    for c in result.regressions:
+        print(f"  REGRESSION {c.module}/{c.name}: "
+              f"{c.baseline_us:.1f} → {c.current_us:.1f} us "
+              f"({c.delta:+.1%})")
+    if result.ok:
+        print("perf_gate: OK")
+
+
+def run_gate(baseline_dir: str, current_dir: str, *,
+             threshold: float = DEFAULT_THRESHOLD,
+             waivers_path: str | None = None,
+             allow_cross_machine: bool = False) -> GateResult:
+    result = compare(load_bench_dir(baseline_dir),
+                     load_bench_dir(current_dir),
+                     threshold=threshold,
+                     waivers=load_waivers(waivers_path),
+                     allow_cross_machine=allow_cross_machine)
+    _report(result, threshold)
+    return result
+
+
+def self_test(threshold: float = DEFAULT_THRESHOLD) -> bool:
+    """Prove the gate catches an injected 2× regression and passes a
+    clean copy.  Runs fully in memory against synthetic payloads."""
+    prov = {"device_kind": "cpu", "hostname": "same-host"}
+    base = {"m": {"module": "m", "provenance": dict(prov), "rows": [
+        {"name": "fast_row", "us_per_call": 100.0},
+        {"name": "slow_row", "us_per_call": 5000.0},
+        {"name": "quality_row", "recall": 0.99},  # no timing: never gates
+    ]}}
+    clean = json.loads(json.dumps(base))
+    regressed = json.loads(json.dumps(base))
+    regressed["m"]["rows"][0]["us_per_call"] = 200.0  # 2× slower
+
+    ok_clean = compare(base, clean, threshold=threshold).ok
+    caught = not compare(base, regressed, threshold=threshold).ok
+    waived_ok = compare(base, regressed, threshold=threshold,
+                        waivers={("m", "fast_row")}).ok
+    cross = json.loads(json.dumps(regressed))
+    cross["m"]["provenance"]["device_kind"] = "tpu"
+    skipped_ok = compare(base, cross, threshold=threshold).ok
+
+    print(f"perf_gate --self-test: clean_pass={ok_clean} "
+          f"regression_caught={caught} waiver_respected={waived_ok} "
+          f"cross_device_skipped={skipped_ok}")
+    return ok_clean and caught and waived_ok and skipped_ok
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="Fail when any BENCH row's us_per_call regressed "
+        "past the threshold vs the baseline trajectory.")
+    ap.add_argument("--baseline-dir", default=".",
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--current-dir", default=".",
+                    help="directory holding freshly generated BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="max allowed fractional p50 regression "
+                    "(default 0.25 = +25%%)")
+    ap.add_argument("--waivers",
+                    default=os.path.join(os.path.dirname(__file__),
+                                         "perf_waivers.json"),
+                    help="JSON allow-list of accepted regressions")
+    ap.add_argument("--allow-cross-machine", action="store_true",
+                    help="compare despite differing provenance hostnames")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the gate flags an injected 2x regression")
+    args = ap.parse_args()
+    if args.self_test:
+        sys.exit(0 if self_test(args.threshold) else 1)
+    result = run_gate(args.baseline_dir, args.current_dir,
+                      threshold=args.threshold, waivers_path=args.waivers,
+                      allow_cross_machine=args.allow_cross_machine)
+    sys.exit(0 if result.ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -27,6 +27,7 @@ from .common import (
     publish_summary,
     recall_of,
     timer_samples,
+    trace_probe,
 )
 
 
@@ -102,4 +103,8 @@ def run(quick: bool = True):
             f"{name}: recall_vs_flat {s['recall_vs_flat']:.3f} < 0.9")
         assert s["bytes_per_point"] <= f32_bytes / 4, (
             f"{name}: {s['bytes_per_point']:.1f} B/pt > f32/4")
+
+    # stage breakdown: one traced ADC-rerank query after the timed
+    # loops (the last variant built is the codes-only PQ index)
+    trace_probe("quant_query", index.search, queries, k)
     return out

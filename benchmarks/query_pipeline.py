@@ -15,7 +15,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from .common import csv_row, latency_quantiles_us, publish_summary, timer_samples
+from .common import (csv_row, latency_quantiles_us, publish_summary,
+                     timer_samples, trace_probe)
 
 
 def run(quick: bool = True):
@@ -83,6 +84,14 @@ def run(quick: bool = True):
         out.append(csv_row(
             f"pipeline_ratio_n{n}", 0.0,
             "fused_over_unfused=%.3f;parity=%.3f" % (ratio, match)))
+
+    # stage breakdown: one traced fused query AFTER the timed loops
+    # (tracing runs the eager stage-by-stage twin — its per-stage wall
+    # split lands in the summary, never in the latencies above)
+    from repro.core.fused import fused_ann_query_traced
+
+    trace_probe("fused_query",
+                lambda: fused_ann_query_traced(index, q, k=k, T=T))
 
     publish_summary("query_pipeline", B=B, d=d, k=k, sizes=speedups,
                     gate="fused p50 < unfused p50 for n >= 32768")

@@ -23,7 +23,7 @@ import sys
 import time
 import traceback
 
-from .common import take_summaries
+from .common import provenance, take_summaries
 
 MODULES = [
     ("fig3_estimator", "benchmarks.estimator_quality"),
@@ -78,6 +78,7 @@ def write_bench_json(key: str, rows: list[str], summaries: dict,
     payload = {
         "module": key,
         "elapsed_s": round(elapsed_s, 3),
+        "provenance": provenance(),
         "rows": _parse_rows(rows),
         "summary": summaries,
     }

@@ -28,7 +28,7 @@ import time
 
 import numpy as np
 
-from .common import csv_row, latency_quantiles_us, publish_summary
+from .common import csv_row, latency_quantiles_us, publish_summary, trace_probe
 
 
 def _make_data(n: int, d: int, seed: int = 0) -> np.ndarray:
@@ -221,4 +221,22 @@ def run(quick: bool = True):
     publish_summary("serve_compiles",
                     closed_loop_compiles=compile_misses_total,
                     palette_bound=palette_bound)
+
+    # -- trace sample: 100 requests through the scheduler, exported ----
+    # as Chrome-trace JSON (CI uploads it as an artifact); runs after
+    # every timed loop so tracing overhead touches nothing above
+    from repro import obs
+
+    def _serve_100():
+        sched = RequestScheduler(step, config=ServeConfig(
+            b_max=16, k_max=32, cache=True, default_deadline_ms=1e6,
+            max_queue=4096))
+        tickets = [sched.submit(queries[i % n_queries], k)
+                   for i in range(100)]
+        sched.drain()
+        return [t.result() for t in tickets]
+
+    _, tr = trace_probe("serve_100", _serve_100)
+    path = obs.save_chrome_trace("trace_serve_sample.json", tr)
+    print(f"# serve trace sample → {path}", flush=True)
     return out

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .common import csv_row, timer
+from .common import csv_row, timer, trace_probe
 
 
 def run(quick: bool = True):
@@ -72,4 +72,8 @@ def run(quick: bool = True):
         "recall=%.3f;flushes=%d;compactions=%d;live=%d"
         % (np.mean(recs), index.n_flushes, index.n_compactions, index.n),
     ))
+
+    # stage breakdown: one traced fan-out query after the timed rounds
+    # shows the per-segment/delta/merge wall split at final occupancy
+    trace_probe("stream_query", index.search, queries, k)
     return out

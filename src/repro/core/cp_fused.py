@@ -37,6 +37,8 @@ import math
 
 import numpy as np
 
+from repro.obs import trace as otrace
+
 from .estimator import solve_parameters
 from .hashing import ProjectionFamily
 
@@ -110,39 +112,48 @@ def cp_fused_search(
     if kk == 0:
         return CpFusedResult(np.empty((0, 2), np.int32),
                              np.empty((0,), np.float32), 0, 0)
-    if key is None:
-        # only the FIRST projection coordinate is needed; project with
-        # that one column rather than paying for the full m-dim family
-        family = ProjectionFamily.create(d, m, seed=seed)
-        key = data @ np.asarray(family.a)[:, 0]
-    key = np.asarray(key, dtype=np.float32).reshape(-1)
-    if key.shape[0] != n:
-        raise ValueError(f"key has {key.shape[0]} entries for n={n}")
+    with otrace.span("cp.query", n=n, d=d, k=kk):
+        with otrace.span("cp.project"):
+            if key is None:
+                # only the FIRST projection coordinate is needed; project
+                # with that one column rather than paying for the full
+                # m-dim family
+                family = ProjectionFamily.create(d, m, seed=seed)
+                key = data @ np.asarray(family.a)[:, 0]
+            key = np.asarray(key, dtype=np.float32).reshape(-1)
+        if key.shape[0] != n:
+            raise ValueError(f"key has {key.shape[0]} entries for n={n}")
 
-    order = np.argsort(key, kind="stable")
-    xs, ks = data[order], key[order]
-    thresh2 = cp_threshold2(c, m, gamma)
-    d2, pi, pj, stats = kops.pair_join(xs, ks, kk, thresh2=thresh2,
-                                       force=force, block_n=block_n)
-    d2 = np.asarray(d2)
-    pi = np.asarray(pi)
-    pj = np.asarray(pj)
-    stats = np.asarray(stats)
+        with otrace.span("cp.sort"):
+            order = np.argsort(key, kind="stable")
+            xs, ks = data[order], key[order]
+        with otrace.span("cp.join"):
+            thresh2 = cp_threshold2(c, m, gamma)
+            d2, pi, pj, stats = kops.pair_join(xs, ks, kk, thresh2=thresh2,
+                                               force=force, block_n=block_n)
+            d2 = np.asarray(d2)
+            pi = np.asarray(pi)
+            pj = np.asarray(pj)
+            stats = np.asarray(stats)
 
-    real = pi >= 0
-    ids_a = order[pi[real]].astype(np.int64)
-    ids_b = order[pj[real]].astype(np.int64)
-    pairs = np.stack([np.minimum(ids_a, ids_b),
-                      np.maximum(ids_a, ids_b)], axis=1).astype(np.int32)
-    # the join ranks pairs by norm-trick distances (MXU form), which
-    # cancel catastrophically exactly where CP answers live — between
-    # near-duplicates.  Recompute the k winners in the stable
-    # subtract-then-norm form (k rows, negligible) and re-sort, so
-    # reported distances are exactly what a direct verification gives.
-    diff = data[pairs[:, 0].astype(np.int64)] - data[pairs[:, 1].astype(np.int64)]
-    dists = np.sqrt(np.sum(diff.astype(np.float32) ** 2, axis=1)
-                    ).astype(np.float32)
-    resort = np.argsort(dists, kind="stable")
+        with otrace.span("cp.reverify"):
+            real = pi >= 0
+            ids_a = order[pi[real]].astype(np.int64)
+            ids_b = order[pj[real]].astype(np.int64)
+            pairs = np.stack([np.minimum(ids_a, ids_b),
+                              np.maximum(ids_a, ids_b)],
+                             axis=1).astype(np.int32)
+            # the join ranks pairs by norm-trick distances (MXU form),
+            # which cancel catastrophically exactly where CP answers
+            # live — between near-duplicates.  Recompute the k winners
+            # in the stable subtract-then-norm form (k rows,
+            # negligible) and re-sort, so reported distances are
+            # exactly what a direct verification gives.
+            diff = (data[pairs[:, 0].astype(np.int64)]
+                    - data[pairs[:, 1].astype(np.int64)])
+            dists = np.sqrt(np.sum(diff.astype(np.float32) ** 2, axis=1)
+                            ).astype(np.float32)
+            resort = np.argsort(dists, kind="stable")
     return CpFusedResult(pairs=pairs[resort], distances=dists[resort],
                          pairs_verified=int(stats[0]),
                          tiles_pruned=int(stats[1]))

@@ -38,7 +38,7 @@ import jax.numpy as jnp
 from .estimator import chi2_ppf
 from .flat_index import FlatIndex
 
-__all__ = ["fused_ann_query", "select_seed"]
+__all__ = ["fused_ann_query", "fused_ann_query_traced", "select_seed"]
 
 
 def select_seed(d2p: jax.Array, T: int, m: int | None) -> jax.Array:
@@ -97,3 +97,45 @@ def fused_ann_query(
     # 3-4. verify + answer: gather-free exact distances, streaming top-k
     d2, idx = kops.verify_topk(index.data, q, cand, k, force=force)
     return idx.astype(jnp.int32), jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+def fused_ann_query_traced(
+    index: FlatIndex,
+    q: jax.Array,
+    *,
+    k: int,
+    T: int,
+    force: str | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Stage-by-stage eager twin of :func:`fused_ann_query` for tracing.
+
+    Identical math and answers, but each stage runs outside jit and is
+    wrapped in an ``ann.*`` span (with the per-kernel ``kernel.*``
+    spans from ``repro.kernels.ops`` nesting underneath), so a trace
+    shows where estimate/select/verify time actually goes.  Callers
+    (``FlatBackend._search``) route here only while a tracer is
+    enabled — the jit'd path above is untouched otherwise.
+    """
+    from repro.kernels import ops as kops
+    from repro.obs import trace as otrace
+
+    tr = otrace.get_tracer()
+    q = jnp.asarray(q, jnp.float32)
+    if q.ndim == 1:
+        q = q[None]
+    with tr.span("ann.query", B=int(q.shape[0]), n=int(index.data.shape[0]),
+                 k=k, T=T):
+        with tr.span("ann.project"):
+            qp = otrace.block(index.family.project(q))
+        with tr.span("ann.estimate"):
+            d2p = kops.pairwise_sq_dist(qp, index.projected, force=force)
+        with tr.span("ann.select"):
+            m = index.params.m if index.params is not None else index.m
+            tau0 = select_seed(d2p, T, m)
+            _, cand = kops.radius_select(d2p, T, tau0=tau0, force=force)
+        with tr.span("ann.verify"):
+            d2, idx = kops.verify_topk(index.data, q, cand, k, force=force)
+        with tr.span("ann.answer"):
+            out = otrace.block(idx.astype(jnp.int32),
+                               jnp.sqrt(jnp.maximum(d2, 0.0)))
+    return out

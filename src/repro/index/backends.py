@@ -41,6 +41,7 @@ from repro.core.baselines import (
 from repro.core.cp import PMLSH_CP
 from repro.core.estimator import solve_parameters
 from repro.core.flat_index import ann_query, build_flat_index, candidate_budget
+from repro.obs import trace as otrace
 
 from .config import IndexConfig
 from .registry import register_backend
@@ -89,7 +90,11 @@ class BaseIndex:
         k = int(k if k is not None else self.config.default_k)
         if k < 1:
             raise ValueError(f"k must be >= 1, got {k}")
-        res = self._search(q, min(k, self.n))
+        with otrace.span("index.search", backend=self.backend_name,
+                         B=int(q.shape[0]), k=k) as sp:
+            res = self._search(q, min(k, self.n))
+            if sp is not None:
+                sp.attrs["work"] = res.stats.as_dict()
         if res.k < k:  # k > n: keep the (B, k) contract via padding
             pad_i = np.full((res.batch, k), -1, dtype=np.int32)
             pad_d = np.full((res.batch, k), np.inf, dtype=np.float32)
@@ -108,7 +113,12 @@ class BaseIndex:
             raise NotImplementedError(
                 f"backend {self.backend_name!r} does not support closest-pair"
             )
-        return self._cp_search(int(k))
+        with otrace.span("index.cp_search", backend=self.backend_name,
+                         k=int(k)) as sp:
+            res = self._cp_search(int(k))
+            if sp is not None:
+                sp.attrs["work"] = res.stats.as_dict()
+        return res
 
     def _cp_search(self, k: int) -> CpSearchResult:
         raise NotImplementedError
@@ -263,20 +273,40 @@ class FlatBackend(BaseIndex):
                  else self.n >= 8192) and k <= 128
         force = (self.force if self.force is not None
                  else (None if self.use_kernels else "ref"))
+        traced = otrace.enabled()
         if self.codec is None:
-            ids, dd = ann_query(self.impl, q, k=k, T=T,
-                                use_kernels=self.use_kernels, fused=fused,
-                                force=force)
+            if traced and fused:
+                # stage-by-stage eager twin: same math, per-stage spans
+                from repro.core.fused import fused_ann_query_traced
+
+                ids, dd = fused_ann_query_traced(self.impl, q, k=k, T=T,
+                                                 force=force)
+            elif traced:
+                # the unfused pipeline stays one jit call: a single
+                # span bounds it, including host materialization
+                with otrace.span("ann.query", B=B, n=self.n, k=k, T=T,
+                                 fused=False):
+                    ids, dd = otrace.block(ann_query(
+                        self.impl, q, k=k, T=T,
+                        use_kernels=self.use_kernels, fused=False,
+                        force=force))
+                    ids, dd = np.asarray(ids), np.asarray(dd)
+            else:
+                ids, dd = ann_query(self.impl, q, k=k, T=T,
+                                    use_kernels=self.use_kernels,
+                                    fused=fused, force=force)
             return SearchResult(
                 np.asarray(ids), np.asarray(dd),
                 stats=WorkStats(rounds=B, candidates_verified=B * T),
             )
         from repro.quant import quant_ann_query
+        from repro.quant.search import quant_ann_query_traced
 
         rerank = (self.rerank if self.rerank is not None
                   else max(4 * k, T // 3, 64))
         R = min(max(rerank, k), T)
-        ids, dd = quant_ann_query(
+        query_fn = quant_ann_query_traced if traced else quant_ann_query
+        ids, dd = query_fn(
             self.impl, self.codec, self.codes, q, k=k, T=T, R=R,
             store_raw=self.store_raw, force=force, fused=fused,
         )

@@ -58,6 +58,21 @@ class WorkStats:
                 + self.node_distance_computations
                 + self.point_distance_computations)
 
+    def as_dict(self) -> dict[str, int]:
+        """Plain-int field dict — the exchange form trace span attrs
+        and BENCH_*.json rows embed (numpy ints are coerced so the
+        result is JSON-serializable as-is)."""
+        return {f.name: int(getattr(self, f.name))
+                for f in dataclasses.fields(self)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "WorkStats":
+        """Inverse of :meth:`as_dict`; unknown keys are ignored and
+        missing ones default to zero, so trajectory files written by
+        older revisions still load."""
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: int(v) for k, v in d.items() if k in names})
+
 
 @dataclasses.dataclass
 class SearchResult:

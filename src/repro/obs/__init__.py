@@ -1,0 +1,33 @@
+"""repro.obs — structured tracing, roofline profiling, exporters.
+
+The observability layer (DESIGN.md §12): hierarchical wall-clock spans
+over every query engine (``obs.trace``), modeled bytes/FLOPs per
+kernel dispatch with achieved-arithmetic-intensity placement
+(``obs.roofline``), and Chrome-trace/Perfetto + flat-summary
+exporters (``obs.export``).
+
+Quickstart::
+
+    from repro import obs
+
+    with obs.tracing() as tr:
+        index.search(Q, k=10)
+    obs.save_chrome_trace("query_trace.json", tr)   # open in Perfetto
+    print(obs.stage_summary(tr))                    # flat per-stage µs
+"""
+from . import export, roofline, trace
+from .export import (coverage, save_chrome_trace, stage_summary,
+                     to_chrome_trace, validate_chrome_trace)
+from .roofline import DevicePeaks, KernelCost, achieved, device_kind
+from .trace import (Span, Trace, Tracer, add_span, block, concrete,
+                    disable, enable, enabled, get_tracer, span)
+from .trace import trace as tracing
+
+__all__ = [
+    "tracing", "Span", "Trace", "Tracer", "get_tracer",
+    "enabled", "enable", "disable", "span", "add_span", "block",
+    "concrete", "export", "roofline", "trace", "KernelCost",
+    "DevicePeaks", "achieved", "device_kind", "to_chrome_trace",
+    "save_chrome_trace", "validate_chrome_trace", "stage_summary",
+    "coverage",
+]

@@ -15,19 +15,65 @@ scripts/check_api.py): ``submitted == completed + shed + pending`` —
 every submitted request is exactly one of answered, shed, or still
 queued.  Cache hits complete without a flush, so they appear in
 ``completed`` but in no bucket's slot counts.
+
+Latency memory is BOUNDED: quantiles come from fixed-capacity
+:class:`LatencyReservoir`s (Vitter's Algorithm R), not unbounded
+lists, so a long-running server's metrics footprint is a constant —
+``cap`` samples overall plus ``cap`` per flushed bucket shape — while
+p50/p99 stay unbiased estimates over the full request history.
 """
 from __future__ import annotations
 
 import dataclasses
+import random
 
 import numpy as np
 
 from repro.index.types import WorkStats
 
-__all__ = ["BucketSnapshot", "MetricsSnapshot", "ServeMetrics"]
+__all__ = ["BucketSnapshot", "LatencyReservoir", "MetricsSnapshot",
+           "ServeMetrics"]
 
 
-def _quantiles_us(samples: list[float]) -> tuple[float, float]:
+class LatencyReservoir:
+    """Fixed-capacity uniform sample of an observation stream
+    (Vitter's Algorithm R): the first ``cap`` observations are kept
+    verbatim; observation ``i`` > cap replaces a uniformly random slot
+    with probability ``cap / i``, so at any point every observation so
+    far had equal probability of being in the sample.  Quantiles over
+    the sample estimate stream quantiles without ever holding more
+    than ``cap`` floats."""
+
+    __slots__ = ("cap", "count", "_samples", "_rng")
+
+    def __init__(self, cap: int = 4096, seed: int = 0):
+        if cap < 1:
+            raise ValueError(f"cap must be >= 1, got {cap}")
+        self.cap = int(cap)
+        self.count = 0  # observations ever seen
+        self._samples: list[float] = []
+        self._rng = random.Random(seed)
+
+    def observe(self, value: float) -> None:
+        self.count += 1
+        if len(self._samples) < self.cap:
+            self._samples.append(float(value))
+            return
+        j = self._rng.randrange(self.count)
+        if j < self.cap:
+            self._samples[j] = float(value)
+
+    def samples(self) -> list[float]:
+        return list(self._samples)
+
+    def __len__(self) -> int:
+        return len(self._samples)
+
+
+def _quantiles_us(samples: list[float] | LatencyReservoir
+                  ) -> tuple[float, float]:
+    if isinstance(samples, LatencyReservoir):
+        samples = samples.samples()
     if not samples:
         return 0.0, 0.0
     s = np.asarray(samples, np.float64) * 1e6
@@ -109,10 +155,15 @@ class MetricsSnapshot:
 
 
 class ServeMetrics:
-    """Mutable serving-counter accumulator (one per scheduler)."""
+    """Mutable serving-counter accumulator (one per scheduler).
 
-    def __init__(self, clock):
+    ``latency_cap`` bounds quantile memory: the overall stream and
+    each bucket shape keep at most that many latency samples (see
+    :class:`LatencyReservoir`)."""
+
+    def __init__(self, clock, latency_cap: int = 4096):
         self._clock = clock
+        self._latency_cap = int(latency_cap)
         self._t0: float | None = None  # first submit
         self.submitted = 0
         self.completed = 0
@@ -127,9 +178,10 @@ class ServeMetrics:
         self.forced_flushes = 0
         self.staging_reuses = 0
         self.work = WorkStats()
-        # per-(B_pad, k_pad): [flushes, real_slots, padded_slots, [lat_s]]
+        # per-(B_pad, k_pad): [flushes, real_slots, padded_slots,
+        #                      LatencyReservoir]
         self._buckets: dict[tuple[int, int], list] = {}
-        self._latencies: list[float] = []
+        self._latencies = LatencyReservoir(self._latency_cap)
 
     # -- event recorders -------------------------------------------------
 
@@ -144,14 +196,21 @@ class ServeMetrics:
     def on_cache_hit(self, latency_s: float) -> None:
         self.cache_hits += 1
         self.completed += 1
-        self._latencies.append(latency_s)
+        self._latencies.observe(latency_s)
 
     def on_cache_miss(self) -> None:
         self.cache_misses += 1
 
+    def _bucket_rec(self, shape: tuple[int, int]) -> list:
+        rec = self._buckets.get(shape)
+        if rec is None:
+            rec = self._buckets[shape] = [
+                0, 0, 0, LatencyReservoir(self._latency_cap)]
+        return rec
+
     def on_flush(self, shape: tuple[int, int], real: int, *,
                  reason: str) -> None:
-        rec = self._buckets.setdefault(shape, [0, 0, 0, []])
+        rec = self._bucket_rec(shape)
         rec[0] += 1
         rec[1] += real
         rec[2] += shape[0]
@@ -164,8 +223,8 @@ class ServeMetrics:
         self.completed += 1
         if degraded:
             self.degraded += 1
-        self._latencies.append(latency_s)
-        self._buckets.setdefault(shape, [0, 0, 0, []])[3].append(latency_s)
+        self._latencies.observe(latency_s)
+        self._bucket_rec(shape)[3].observe(latency_s)
 
     def on_compile(self, hit: bool) -> None:
         if hit:

@@ -50,6 +50,7 @@ from typing import Callable
 import numpy as np
 
 from repro.index.types import SearchResult
+from repro.obs import trace as otrace
 
 from .admission import DEGRADE, SHED, AdmissionController
 from .batcher import (PAD_DISTANCE, Bucket, BucketPalette, PendingRequest,
@@ -309,54 +310,79 @@ class RequestScheduler:
         step = self.degraded_step if tier == "degraded" else self.step
         b_pad = self.palette.b_pad(len(reqs))
         shape = (b_pad, k_pad)
-        self.metrics.on_flush(shape, real=len(reqs), reason=reason)
-        self.metrics.on_compile(hit=(b_pad, k_pad, tier) in self._seen_shapes)
-        self._seen_shapes.add((b_pad, k_pad, tier))
+        with otrace.span("serve.flush", reason=reason, tier=tier,
+                         b_pad=b_pad, k_pad=k_pad, real=len(reqs)) as fsp:
+            self.metrics.on_flush(shape, real=len(reqs), reason=reason)
+            self.metrics.on_compile(
+                hit=(b_pad, k_pad, tier) in self._seen_shapes)
+            self._seen_shapes.add((b_pad, k_pad, tier))
 
-        skey = (b_pad, tier)
-        staging = self._staging.get(skey)
-        if staging is None:
-            staging = self._staging[skey] = StagingBuffers(b_pad,
-                                                           step.index.d)
-        Q = staging.stage([r.query for r in reqs])
-        if staging.reuses > 0:
-            self.metrics.staging_reuses += 1
+            skey = (b_pad, tier)
+            staging = self._staging.get(skey)
+            if staging is None:
+                staging = self._staging[skey] = StagingBuffers(b_pad,
+                                                               step.index.d)
+            with otrace.span("serve.stage"):
+                Q = staging.stage([r.query for r in reqs])
+            if staging.reuses > 0:
+                self.metrics.staging_reuses += 1
 
-        t0 = self.clock()
-        res = step.index.search(Q, k=k_pad)
-        # normalize to per-slot time so the estimate transfers across
-        # batch widths (pump() scales it back up by the projected B_pad)
-        dt = (self.clock() - t0) / b_pad
-        alpha = self.config.service_ewma_alpha
-        prev = self._service_ewma.get(bkey)
-        self._service_ewma[bkey] = (dt if prev is None
-                                    else alpha * dt + (1 - alpha) * prev)
-        self.metrics.add_work(res.stats)
+            t0 = self.clock()
+            with otrace.span("serve.search"):
+                res = step.index.search(Q, k=k_pad)
+            # normalize to per-slot time so the estimate transfers
+            # across batch widths (pump() scales it back up by the
+            # projected B_pad)
+            dt = (self.clock() - t0) / b_pad
+            alpha = self.config.service_ewma_alpha
+            prev = self._service_ewma.get(bkey)
+            self._service_ewma[bkey] = (dt if prev is None
+                                        else alpha * dt + (1 - alpha) * prev)
+            self.metrics.add_work(res.stats)
+            if fsp is not None:
+                # queue-wait is scheduler-clock time between submit and
+                # service start; per-request spans are only emitted
+                # under the real perf_counter clock, where the
+                # timestamps share the span timeline's epoch
+                waits = [max(t0 - r.submit_t, 0.0) for r in reqs]
+                fsp.attrs["queue_wait_mean_ms"] = round(
+                    sum(waits) / len(waits) * 1e3, 4)
+                fsp.attrs["queue_wait_max_ms"] = round(max(waits) * 1e3, 4)
+                fsp.attrs["work"] = res.stats.as_dict()
+                if self.clock is time.perf_counter:
+                    for r in reqs:
+                        otrace.add_span("serve.queue_wait", r.submit_t,
+                                        t0, rid=r.id)
 
-        version = getattr(step, "version", 0)
-        done_t = self.clock()
-        for i, r in enumerate(reqs):
-            sub = SearchResult(res.indices[i: i + 1, : r.k].copy(),
-                               res.distances[i: i + 1, : r.k].copy())
-            if r.k_req > r.k:  # degraded k clamp: pad back to requested k
-                pad_i = np.full((1, r.k_req), -1, np.int32)
-                pad_d = np.full((1, r.k_req), np.inf, np.float32)
-                pad_i[:, : r.k] = sub.indices
-                pad_d[:, : r.k] = sub.distances
-                sub = SearchResult(pad_i, pad_d)
-            latency = done_t - r.submit_t
-            resp = self._respond(r.id, sub, step, degraded=r.degraded,
-                                 latency_s=latency)
-            self._pending.pop(r.id, None)
-            self.metrics.on_complete(shape, latency, degraded=r.degraded)
-            if self.cache is not None and r.cache_key is not None:
-                self.cache.put(r.cache_key, sub, version=version)
-            # deliver into the live ticket; a dropped ticket means the
-            # caller walked away — the response is dropped with it
-            tref = self._tickets.pop(r.id, None)
-            ticket = tref() if tref is not None else None
-            if ticket is not None:
-                ticket._response = resp
+            version = getattr(step, "version", 0)
+            done_t = self.clock()
+            with otrace.span("serve.deliver"):
+                for i, r in enumerate(reqs):
+                    sub = SearchResult(res.indices[i: i + 1, : r.k].copy(),
+                                       res.distances[i: i + 1, : r.k].copy())
+                    if r.k_req > r.k:  # degraded k clamp: pad back to
+                        # the requested k
+                        pad_i = np.full((1, r.k_req), -1, np.int32)
+                        pad_d = np.full((1, r.k_req), np.inf, np.float32)
+                        pad_i[:, : r.k] = sub.indices
+                        pad_d[:, : r.k] = sub.distances
+                        sub = SearchResult(pad_i, pad_d)
+                    latency = done_t - r.submit_t
+                    resp = self._respond(r.id, sub, step,
+                                         degraded=r.degraded,
+                                         latency_s=latency)
+                    self._pending.pop(r.id, None)
+                    self.metrics.on_complete(shape, latency,
+                                             degraded=r.degraded)
+                    if self.cache is not None and r.cache_key is not None:
+                        self.cache.put(r.cache_key, sub, version=version)
+                    # deliver into the live ticket; a dropped ticket
+                    # means the caller walked away — the response is
+                    # dropped with it
+                    tref = self._tickets.pop(r.id, None)
+                    ticket = tref() if tref is not None else None
+                    if ticket is not None:
+                        ticket._response = resp
         return len(reqs)
 
     def _respond(self, rid: int, sub: SearchResult, step, *,

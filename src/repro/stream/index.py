@@ -49,6 +49,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.obs import trace as otrace
+
 from repro.index.backends import BaseIndex
 from repro.index.registry import register_backend
 from repro.index.types import CpSearchResult, SearchResult, WorkStats
@@ -216,36 +218,47 @@ class StreamingIndex(BaseIndex):
         B = q.shape[0]
         stats = WorkStats()
         id_blocks, dist_blocks = [], []
-        for seg in self.segments:
-            # widen by the segment's tombstone count so filtering dead
-            # rows at merge time cannot starve the per-segment top-k
-            gids, dd, st = seg.search(q, k + seg.dead)
+        with otrace.span("stream.search", B=B, k=k,
+                         segments=len(self.segments),
+                         delta=len(self.delta)):
+            for si, seg in enumerate(self.segments):
+                # widen by the segment's tombstone count so filtering
+                # dead rows at merge time cannot starve the per-segment
+                # top-k
+                with otrace.span("stream.segment", serial=seg.serial,
+                                 size=seg.size, dead=seg.dead,
+                                 backend=self.segment_backend):
+                    gids, dd, st = seg.search(q, k + seg.dead)
+                id_blocks.append(gids)
+                dist_blocks.append(dd)
+                stats += st
+            with otrace.span("stream.delta", size=len(self.delta)):
+                gids, dd, st = self.delta.search(q, k, force=self._force)
             id_blocks.append(gids)
             dist_blocks.append(dd)
             stats += st
-        gids, dd, st = self.delta.search(q, k, force=self._force)
-        id_blocks.append(gids)
-        dist_blocks.append(dd)
-        stats += st
 
-        gids = np.concatenate(id_blocks, axis=1)  # (B, S) int64
-        dd = np.concatenate(dist_blocks, axis=1).astype(np.float32)
-        if k == 0 or gids.shape[1] == 0:
-            return SearchResult(np.empty((B, 0), np.int32),
-                                np.empty((B, 0), np.float32), stats=stats)
+            with otrace.span("stream.merge"):
+                gids = np.concatenate(id_blocks, axis=1)  # (B, S) int64
+                dd = np.concatenate(dist_blocks, axis=1).astype(np.float32)
+                if k == 0 or gids.shape[1] == 0:
+                    return SearchResult(np.empty((B, 0), np.int32),
+                                        np.empty((B, 0), np.float32),
+                                        stats=stats)
 
-        # tombstones (and per-source -1 padding) applied at merge time
-        invalid = (gids < 0) | ~self._alive[np.maximum(gids, 0)]
-        dd = np.where(invalid, np.inf, dd)
+                # tombstones (and per-source -1 padding) applied at
+                # merge time
+                invalid = (gids < 0) | ~self._alive[np.maximum(gids, 0)]
+                dd = np.where(invalid, np.inf, dd)
 
-        from repro.kernels import ops
+                from repro.kernels import ops
 
-        kk = min(k, gids.shape[1])
-        vals, cols = ops.topk_smallest(dd, kk, force=self._force)
-        vals = np.asarray(vals, np.float32)
-        cols = np.asarray(cols, np.int64)
-        merged = np.take_along_axis(gids, cols, axis=1)
-        merged = np.where(np.isinf(vals), -1, merged)
+                kk = min(k, gids.shape[1])
+                vals, cols = ops.topk_smallest(dd, kk, force=self._force)
+                vals = np.asarray(vals, np.float32)
+                cols = np.asarray(cols, np.int64)
+                merged = np.take_along_axis(gids, cols, axis=1)
+                merged = np.where(np.isinf(vals), -1, merged)
         return SearchResult(merged.astype(np.int32), vals, stats=stats)
 
     # -- closest pair ----------------------------------------------------
@@ -264,20 +277,22 @@ class StreamingIndex(BaseIndex):
         """
         from repro.core.cp_fused import cp_fused_search
 
-        blocks, gids = [], []
-        for seg in self.segments:  # sealed runs first, mutable delta last
-            live = seg.ids[self._alive[seg.ids]]
-            if live.size:
-                blocks.append(self._store[live])
-                gids.append(live)
-        if len(self.delta):
-            blocks.append(self.delta.vectors)
-            gids.append(self.delta.ids)
-        if not blocks or sum(b.shape[0] for b in blocks) < 2:
-            return CpSearchResult(np.empty((0, 2), np.int32),
-                                  np.empty((0,), np.float32))
-        x = np.concatenate(blocks, axis=0)
-        gid = np.concatenate(gids)
+        with otrace.span("stream.cp_gather", segments=len(self.segments),
+                         delta=len(self.delta)):
+            blocks, gids = [], []
+            for seg in self.segments:  # sealed runs first, delta last
+                live = seg.ids[self._alive[seg.ids]]
+                if live.size:
+                    blocks.append(self._store[live])
+                    gids.append(live)
+            if len(self.delta):
+                blocks.append(self.delta.vectors)
+                gids.append(self.delta.ids)
+            if not blocks or sum(b.shape[0] for b in blocks) < 2:
+                return CpSearchResult(np.empty((0, 2), np.int32),
+                                      np.empty((0,), np.float32))
+            x = np.concatenate(blocks, axis=0)
+            gid = np.concatenate(gids)
         cfg = self.config
         r = cp_fused_search(
             x, k, m=cfg.m, c=cfg.cp_c,
