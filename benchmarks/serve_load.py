@@ -24,6 +24,7 @@ accounting sums to the submitted count.
 """
 from __future__ import annotations
 
+import json
 import time
 
 import numpy as np
@@ -221,6 +222,88 @@ def run(quick: bool = True):
     publish_summary("serve_compiles",
                     closed_loop_compiles=compile_misses_total,
                     palette_bound=palette_bound)
+
+    # -- quality audit: 1% shadow sampling on the closed loop ----------
+    # gates (ISSUE 8): the auditor's online recall matches an offline
+    # ground-truth replay of the same deterministic sample within
+    # ±0.02; audited == sampled − pending; the audit adds < 5% to p50
+    from repro.obs import metrics as obs_metrics
+    from repro.obs.quality import QualityAuditor
+
+    audit_fraction = 0.01
+    C = 8
+
+    def _closed_pass(auditor):
+        sched = RequestScheduler(step, config=ServeConfig(
+            b_max=32, k_max=32, cache=False, default_deadline_ms=1e6,
+            max_queue=4096), auditor=auditor)
+        [t.result() for t in sched.submit_batch(queries[:C], k)]  # warm
+        lats = []
+        for r in range(n_queries // C):
+            tickets = sched.submit_batch(queries[r * C:(r + 1) * C], k)
+            lats.extend(t.result().latency_s for t in tickets)
+        return lats
+
+    # best-of-2 p50 on each side: the gate compares medians of the
+    # same deterministic trace, not scheduler-vs-timer noise
+    p50_off = min(latency_quantiles_us(_closed_pass(None))["p50_us"]
+                  for _ in range(2))
+    auditor = QualityAuditor.for_index(
+        index, sample_fraction=audit_fraction, seed=0)
+    p50_on = min(latency_quantiles_us(_closed_pass(auditor))["p50_us"]
+                 for _ in range(2))
+    auditor.audit()  # drain whatever the pump budget left queued
+    qrep = auditor.report()
+    assert auditor.audited == auditor.sampled - auditor.pending, (
+        "audit accounting broke: audited != sampled - pending")
+    assert qrep.audited > 0, "1% sampler admitted nothing on this trace"
+
+    # offline ground-truth replay of the same deterministic sample
+    replayed = [q for q in queries if auditor.sampled_query(q)]
+    recalls = []
+    for q in replayed:
+        served = np.asarray(index.search(q[None], k).indices[0])
+        truth = np.argsort(np.linalg.norm(data - q, axis=-1))[:k]
+        recalls.append(len(set(served.tolist()) & set(truth.tolist())) / k)
+    offline_recall = float(np.mean(recalls))
+    assert abs(qrep.recall - offline_recall) <= 0.02, (
+        f"auditor recall {qrep.recall:.4f} drifted from offline "
+        f"ground truth {offline_recall:.4f}")
+    p50_overhead = p50_on / p50_off - 1.0
+    assert p50_overhead < 0.05, (
+        f"1% audit sampling added {p50_overhead:.1%} to p50")
+    out.append(csv_row(
+        "serve_quality", 0.0,
+        "sampled=%d;audited=%d;recall=%.3f;offline_recall=%.3f;"
+        "ratio=%.4f;coverage=%.3f;nominal=%.3f;p50_overhead=%.4f"
+        % (auditor.sampled, auditor.audited, qrep.recall, offline_recall,
+           qrep.ratio, qrep.ci_coverage, qrep.nominal_coverage,
+           p50_overhead)))
+    publish_summary(
+        "serve_quality", sampled=auditor.sampled, audited=auditor.audited,
+        recall=round(qrep.recall, 4), offline_recall=round(offline_recall, 4),
+        ratio=round(qrep.ratio, 4), ci_coverage=round(qrep.ci_coverage, 4),
+        nominal_coverage=round(qrep.nominal_coverage, 4),
+        calibration_error=round(qrep.calibration_error, 4),
+        p50_overhead=round(p50_overhead, 4), accounting_ok=True)
+
+    # the run's whole metrics surface, in Prometheus exposition text
+    # (CI uploads both files as artifacts next to the Chrome trace)
+    with open("serve_metrics.prom", "w") as f:
+        f.write(obs_metrics.get_registry().to_prometheus())
+    with open("serve_quality_report.json", "w") as f:
+        json.dump({
+            "sampled": qrep.sampled, "audited": qrep.audited,
+            "pending": qrep.pending, "recall": qrep.recall,
+            "offline_recall": offline_recall, "ratio": qrep.ratio,
+            "ci_coverage": qrep.ci_coverage,
+            "nominal_coverage": qrep.nominal_coverage,
+            "calibration_error": qrep.calibration_error,
+            "alpha": qrep.alpha, "p50_overhead": p50_overhead,
+        }, f, indent=1)
+        f.write("\n")
+    print("# quality audit → serve_metrics.prom, serve_quality_report.json",
+          flush=True)
 
     # -- trace sample: 100 requests through the scheduler, exported ----
     # as Chrome-trace JSON (CI uploads it as an artifact); runs after

@@ -222,6 +222,65 @@ def check_serve(data, rng) -> None:
           "cache invalidation]")
 
 
+def check_quality(data, rng) -> None:
+    """Quality gate (DESIGN.md §13): the shadow auditor's online recall
+    equals an offline ground-truth replay of the same served answers,
+    the accounting identity ``audited == sampled − pending`` holds at
+    every stage (including under queue overflow, which refuses the
+    sample rather than breaking the books), and the Lemma-3 coverage
+    audit actually scored pairs."""
+    from repro.index import IndexConfig, build_index
+    from repro.obs.metrics import MetricsRegistry
+    from repro.obs.quality import QualityAuditor
+
+    index = build_index(data, IndexConfig(backend="flat", seed=0))
+    reg = MetricsRegistry()  # private: the gate must not pollute global
+    auditor = QualityAuditor.for_index(
+        index, sample_fraction=1.0, seed=0, registry=reg)
+
+    k = 5
+    queries = (data[rng.integers(0, len(data), 64)]
+               + rng.normal(size=(64, data.shape[1])).astype(np.float32)
+               * 0.01)
+    served = index.search(queries, k)
+    for q, ids, dd in zip(queries, served.indices, served.distances):
+        assert auditor.maybe_sample(q, ids, dd), "fraction=1.0 must sample"
+    assert auditor.sampled == len(queries)
+    # the identity holds mid-flight, not just at drain
+    auditor.audit(max_items=10)
+    assert auditor.audited == 10 and auditor.pending == len(queries) - 10
+    assert auditor.audited == auditor.sampled - auditor.pending
+    auditor.audit()
+    rep = auditor.report()
+    assert rep.pending == 0 and rep.audited == len(queries)
+
+    # offline ground-truth replay: same served rows, same truth
+    recalls = []
+    for q, ids in zip(queries, served.indices):
+        truth = np.argsort(np.linalg.norm(data - q, axis=-1))[:k]
+        recalls.append(len(set(ids.tolist()) & set(truth.tolist())) / k)
+    offline = float(np.mean(recalls))
+    assert abs(rep.recall - offline) < 1e-9, (
+        f"auditor recall {rep.recall} != offline ground truth {offline}")
+    assert rep.ratio >= 1.0 - 1e-6, f"ratio {rep.ratio} below 1"
+    assert rep.coverage_pairs > 0, "coverage audit scored no pairs"
+
+    # overflow refuses the SAMPLE; the books stay balanced
+    small = QualityAuditor.for_index(
+        index, sample_fraction=1.0, seed=0, max_pending=4, registry=reg)
+    for q, ids, dd in zip(queries[:12], served.indices[:12],
+                          served.distances[:12]):
+        small.maybe_sample(q, ids, dd)
+    assert small.sampled == 4 and small.overflowed == 8, (
+        small.sampled, small.overflowed)
+    assert small.audited == small.sampled - small.pending == 0
+    small.audit()
+    assert small.audited == small.sampled == 4 and small.pending == 0
+    print(f"  ok   quality gate  [{len(queries)}-query audit == offline "
+          "truth, accounting identity under overflow, "
+          f"{rep.coverage_pairs} coverage pairs]")
+
+
 def check_cp(data, rng) -> None:
     """Capability-honest CP gate over every backend advertising "cp"."""
     from repro.index import IndexConfig, available_backends, build_index
@@ -343,11 +402,17 @@ def main() -> int:
         failures.append("serve-gate")
         print(f"  FAIL serve gate    {type(e).__name__}: {e}")
 
+    try:
+        check_quality(data, rng)
+    except Exception as e:  # noqa: BLE001
+        failures.append("quality-gate")
+        print(f"  FAIL quality gate  {type(e).__name__}: {e}")
+
     if failures:
         print(f"check_api: FAILED for {failures}")
         return 1
     print(f"check_api: all {len(available_backends())} backends conform "
-          "+ quant gate + cp gate + serve gate")
+          "+ quant gate + cp gate + serve gate + quality gate")
     return 0
 
 

@@ -81,7 +81,8 @@ def candidate_budget(params: PMLSHParams, n: int, k: int) -> int:
     return int(min(max(int(np.ceil(params.beta * n)) + k, k), n))
 
 
-@partial(jax.jit, static_argnames=("k", "T", "use_kernels", "fused", "force"))
+@partial(jax.jit, static_argnames=("k", "T", "use_kernels", "fused", "force",
+                                   "with_count"))
 def ann_query(
     index: FlatIndex,
     q: jax.Array,
@@ -91,7 +92,8 @@ def ann_query(
     use_kernels: bool = True,
     fused: bool = False,
     force: str | None = None,
-) -> tuple[jax.Array, jax.Array]:
+    with_count: bool = False,
+):
     """(c,k)-ANN for a batch of queries.
 
     Args:
@@ -107,9 +109,14 @@ def ann_query(
         ties-free data.
       force: explicit kernel dispatch mode ("pallas" | "interpret" |
         "ref"); None derives it from ``use_kernels``.
+      with_count: also return the select stage's per-query survivor
+        counts (B,) int32 — realized T on the fused radius path; the
+        rank cut here selects exactly T, so the unfused path reports
+        the budget.
 
     Returns:
-      (indices (B, k) int32 into index.data, distances (B, k) float32).
+      (indices (B, k) int32 into index.data, distances (B, k) float32),
+      plus the counts when ``with_count``.
     """
     from repro.core.fused import fused_ann_query
     from repro.kernels import ops as kops
@@ -117,7 +124,8 @@ def ann_query(
     if force is None:
         force = None if use_kernels else "ref"
     if fused:
-        return fused_ann_query(index, q, k=k, T=T, force=force)
+        return fused_ann_query(index, q, k=k, T=T, force=force,
+                               with_count=with_count)
 
     q = jnp.asarray(q, jnp.float32)
     if q.ndim == 1:
@@ -136,7 +144,10 @@ def ann_query(
     # 4. answer
     negk, sel = jax.lax.top_k(-d2, k)
     idx = jnp.take_along_axis(cand, sel, axis=1)
-    return idx.astype(jnp.int32), jnp.sqrt(jnp.maximum(-negk, 0.0))
+    out = idx.astype(jnp.int32), jnp.sqrt(jnp.maximum(-negk, 0.0))
+    if with_count:
+        return out + (jnp.full((q.shape[0],), T, jnp.int32),)
+    return out
 
 
 def ann_search(

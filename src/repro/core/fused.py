@@ -59,7 +59,7 @@ def select_seed(d2p: jax.Array, T: int, m: int | None) -> jax.Array:
     return scale * float(chi2_ppf(q, m))
 
 
-@partial(jax.jit, static_argnames=("k", "T", "force"))
+@partial(jax.jit, static_argnames=("k", "T", "force", "with_count"))
 def fused_ann_query(
     index: FlatIndex,
     q: jax.Array,
@@ -67,7 +67,8 @@ def fused_ann_query(
     k: int,
     T: int,
     force: str | None = None,
-) -> tuple[jax.Array, jax.Array]:
+    with_count: bool = False,
+):
     """(c,k)-ANN through the fused pipeline.
 
     Same contract as ``flat_index.ann_query`` — (indices (B, k) int32,
@@ -78,6 +79,10 @@ def fused_ann_query(
       k: results per query (≤ 128; the answer-size regime).
       T: candidate budget (βn + k) from ``candidate_budget``.
       force: kernel dispatch override ("pallas"|"interpret"|"ref"|None).
+      with_count: also return the select stage's per-query survivor
+        counts (B,) int32 — realized T, the signal behind
+        ``WorkStats.candidates_selected``.  A static arg (the pipeline
+        is jit'd, so the extra output must be part of the return).
     """
     from repro.kernels import ops as kops
 
@@ -92,11 +97,13 @@ def fused_ann_query(
     # 2. select: radius-threshold selection seeded from Eq. 9
     m = index.params.m if index.params is not None else index.m
     tau0 = select_seed(d2p, T, m)
-    _, cand = kops.radius_select(d2p, T, tau0=tau0, force=force)  # (B, T)
+    _, cand, cnt = kops.radius_select(d2p, T, tau0=tau0, force=force,
+                                      with_count=True)  # (B, T), (B,)
 
     # 3-4. verify + answer: gather-free exact distances, streaming top-k
     d2, idx = kops.verify_topk(index.data, q, cand, k, force=force)
-    return idx.astype(jnp.int32), jnp.sqrt(jnp.maximum(d2, 0.0))
+    out = idx.astype(jnp.int32), jnp.sqrt(jnp.maximum(d2, 0.0))
+    return out + (cnt,) if with_count else out
 
 
 def fused_ann_query_traced(
@@ -106,7 +113,8 @@ def fused_ann_query_traced(
     k: int,
     T: int,
     force: str | None = None,
-) -> tuple[jax.Array, jax.Array]:
+    with_count: bool = False,
+):
     """Stage-by-stage eager twin of :func:`fused_ann_query` for tracing.
 
     Identical math and answers, but each stage runs outside jit and is
@@ -114,7 +122,9 @@ def fused_ann_query_traced(
     spans from ``repro.kernels.ops`` nesting underneath), so a trace
     shows where estimate/select/verify time actually goes.  Callers
     (``FlatBackend._search``) route here only while a tracer is
-    enabled — the jit'd path above is untouched otherwise.
+    enabled — the jit'd path above is untouched otherwise.  The select
+    span additionally records the batch's summed survivor count as
+    ``candidates_selected``.
     """
     from repro.kernels import ops as kops
     from repro.obs import trace as otrace
@@ -129,13 +139,16 @@ def fused_ann_query_traced(
             qp = otrace.block(index.family.project(q))
         with tr.span("ann.estimate"):
             d2p = kops.pairwise_sq_dist(qp, index.projected, force=force)
-        with tr.span("ann.select"):
+        with tr.span("ann.select") as sp:
             m = index.params.m if index.params is not None else index.m
             tau0 = select_seed(d2p, T, m)
-            _, cand = kops.radius_select(d2p, T, tau0=tau0, force=force)
+            _, cand, cnt = kops.radius_select(d2p, T, tau0=tau0, force=force,
+                                              with_count=True)
+            if sp is not None:
+                sp.attrs["candidates_selected"] = int(jnp.sum(cnt))
         with tr.span("ann.verify"):
             d2, idx = kops.verify_topk(index.data, q, cand, k, force=force)
         with tr.span("ann.answer"):
             out = otrace.block(idx.astype(jnp.int32),
                                jnp.sqrt(jnp.maximum(d2, 0.0)))
-    return out
+    return out + (cnt,) if with_count else out

@@ -263,6 +263,15 @@ class FlatBackend(BaseIndex):
                 self.impl, data=jnp.zeros((0, self.d), jnp.float32))
             self.data = np.empty((0, self.d), dtype=np.float32)
 
+    def _record_select(self, counts, T: int) -> int:
+        """Stash the last batch's per-query select survivor counts —
+        the drift monitor (``obs.drift``) reads them off segment
+        backends, and ROADMAP item 2's adaptive termination will.
+        Returns the batch sum for ``WorkStats.candidates_selected``."""
+        self.last_select_counts = np.asarray(counts, dtype=np.int64)
+        self.last_select_budget = int(T)
+        return int(self.last_select_counts.sum())
+
     def _search(self, q: np.ndarray, k: int) -> SearchResult:
         T = candidate_budget(self.impl.params, self.n, k)
         B = q.shape[0]
@@ -279,25 +288,28 @@ class FlatBackend(BaseIndex):
                 # stage-by-stage eager twin: same math, per-stage spans
                 from repro.core.fused import fused_ann_query_traced
 
-                ids, dd = fused_ann_query_traced(self.impl, q, k=k, T=T,
-                                                 force=force)
+                ids, dd, cnt = fused_ann_query_traced(
+                    self.impl, q, k=k, T=T, force=force, with_count=True)
             elif traced:
                 # the unfused pipeline stays one jit call: a single
                 # span bounds it, including host materialization
                 with otrace.span("ann.query", B=B, n=self.n, k=k, T=T,
                                  fused=False):
-                    ids, dd = otrace.block(ann_query(
+                    ids, dd, cnt = otrace.block(ann_query(
                         self.impl, q, k=k, T=T,
                         use_kernels=self.use_kernels, fused=False,
-                        force=force))
+                        force=force, with_count=True))
                     ids, dd = np.asarray(ids), np.asarray(dd)
             else:
-                ids, dd = ann_query(self.impl, q, k=k, T=T,
-                                    use_kernels=self.use_kernels,
-                                    fused=fused, force=force)
+                ids, dd, cnt = ann_query(self.impl, q, k=k, T=T,
+                                         use_kernels=self.use_kernels,
+                                         fused=fused, force=force,
+                                         with_count=True)
             return SearchResult(
                 np.asarray(ids), np.asarray(dd),
-                stats=WorkStats(rounds=B, candidates_verified=B * T),
+                stats=WorkStats(rounds=B, candidates_verified=B * T,
+                                candidates_selected=self._record_select(
+                                    cnt, T)),
             )
         from repro.quant import quant_ann_query
         from repro.quant.search import quant_ann_query_traced
@@ -306,15 +318,17 @@ class FlatBackend(BaseIndex):
                   else max(4 * k, T // 3, 64))
         R = min(max(rerank, k), T)
         query_fn = quant_ann_query_traced if traced else quant_ann_query
-        ids, dd = query_fn(
+        ids, dd, cnt = query_fn(
             self.impl, self.codec, self.codes, q, k=k, T=T, R=R,
             store_raw=self.store_raw, force=force, fused=fused,
+            with_count=True,
         )
         return SearchResult(
             np.asarray(ids), np.asarray(dd),
             stats=WorkStats(
                 rounds=B,
                 candidates_verified=B * R if self.store_raw else 0,
+                candidates_selected=self._record_select(cnt, T),
                 point_distance_computations=B * T,  # the ADC rerank tier
             ),
         )

@@ -29,6 +29,12 @@ class WorkStats:
 
     rounds: int = 0  # range-query / probing rounds issued
     candidates_verified: int = 0  # EXACT original-space distance comps
+    # realized T: select-stage survivors (summed over the batch).  The
+    # fused radius path reports points actually inside the final τ —
+    # the calibration signal for query-adaptive termination (ROADMAP
+    # §2); rank-cut paths select exactly the T budget and report that;
+    # tree/host paths with no dense select stage report 0.
+    candidates_selected: int = 0
     node_distance_computations: int = 0  # tree-node pruning distances
     # estimate-tier per-point distance comps: leaf-scan projected
     # distances (pmtree), code-estimated ADC distances (quant rerank);
@@ -43,14 +49,10 @@ class WorkStats:
     tiles_pruned: int = 0
 
     def __add__(self, other: "WorkStats") -> "WorkStats":
-        return WorkStats(
-            self.rounds + other.rounds,
-            self.candidates_verified + other.candidates_verified,
-            self.node_distance_computations + other.node_distance_computations,
-            self.point_distance_computations + other.point_distance_computations,
-            self.pairs_verified + other.pairs_verified,
-            self.tiles_pruned + other.tiles_pruned,
-        )
+        return WorkStats(**{
+            f.name: getattr(self, f.name) + getattr(other, f.name)
+            for f in dataclasses.fields(self)
+        })
 
     @property
     def total_distance_computations(self) -> int:

@@ -194,7 +194,7 @@ def default_select_seed(d: jax.Array, T: int, *, stride: int = 8) -> jax.Array:
 @_instrumented("kernel.radius_select", _select_cost)
 def radius_select(d: jax.Array, T: int, *, tau0: jax.Array | None = None,
                   T_pad: int | None = None, force: str | None = None,
-                  **block_kw) -> tuple[jax.Array, jax.Array]:
+                  with_count: bool = False, **block_kw):
     """Row-wise T smallest (values, indices) by radius thresholding.
 
     Same contract as :func:`topk_smallest` (ascending, lowest-index
@@ -209,6 +209,11 @@ def radius_select(d: jax.Array, T: int, *, tau0: jax.Array | None = None,
     per-row survivor counts and rerouted to the exact sort, so the
     radius path can only ever be a perf win, never a recall loss.
     Degenerate budgets (T_pad ≥ N) fall back to the sort directly.
+
+    ``with_count=True`` appends the per-row survivor count (B,) int32 —
+    the realized T under the final threshold, surfaced to callers as
+    ``WorkStats.candidates_selected``.  Sort paths (degenerate budget,
+    tie-cluster reroute) have no threshold and report the budget T.
     """
     mode = _mode(force)
     B, N = d.shape
@@ -216,9 +221,12 @@ def radius_select(d: jax.Array, T: int, *, tau0: jax.Array | None = None,
         T_pad = T + max(256, T // 8)
     T_pad = min(max(T_pad, T), N)
     if mode == "ref":
-        return ref.radius_select(d, T, T_pad=T_pad)
+        return ref.radius_select(d, T, T_pad=T_pad, with_count=with_count)
     if T_pad >= N:  # nothing to skip — the plain sort is cheaper
-        return ref.topk_smallest(d, T)
+        vals, idx = ref.topk_smallest(d, T)
+        if with_count:
+            return vals, idx, jnp.full((B,), T, jnp.int32)
+        return vals, idx
     if tau0 is None:
         tau0 = default_select_seed(d, T)
     vals_p, idx_p, cnt = radius_select_pallas(
@@ -226,13 +234,19 @@ def radius_select(d: jax.Array, T: int, *, tau0: jax.Array | None = None,
 
     def _trim():
         neg, pos = jax.lax.top_k(-vals_p, T)
-        return -neg, jnp.take_along_axis(idx_p, pos, axis=1)
+        return (-neg, jnp.take_along_axis(idx_p, pos, axis=1),
+                cnt.astype(jnp.int32))
 
     # buffer overflow (pathological tie cluster at the threshold) drops
     # survivors in index order — arbitrarily wrong ones — so reroute to
     # the exact sort rather than return a degraded candidate set
-    return jax.lax.cond(jnp.any(cnt > T_pad),
-                        lambda: ref.topk_smallest(d, T), _trim)
+    vals, idx, cnt_out = jax.lax.cond(
+        jnp.any(cnt > T_pad),
+        lambda: ref.topk_smallest(d, T) + (jnp.full((B,), T, jnp.int32),),
+        _trim)
+    if with_count:
+        return vals, idx, cnt_out
+    return vals, idx
 
 
 def pair_join(x, key, k: int, *, thresh2: float, force: str | None = None,

@@ -90,7 +90,7 @@ def _bisect_threshold(d: jax.Array, target, iters: int) -> jax.Array:
 
 
 def radius_select(d: jax.Array, T: int, *, T_pad: int | None = None,
-                  sample_stride: int = 8) -> tuple[jax.Array, jax.Array]:
+                  sample_stride: int = 8, with_count: bool = False):
     """T smallest per row of d (B, N) by RADIUS, not rank — the jnp
     oracle of the ``select.py`` kernel and the fast non-TPU SELECT path.
 
@@ -106,6 +106,12 @@ def radius_select(d: jax.Array, T: int, *, T_pad: int | None = None,
     the T-th smallest value cannot fit the compaction buffer, so that
     (pathological, never-on-continuous-distances) case is detected from
     the survivor count and rerouted to the plain sort.
+
+    With ``with_count=True`` additionally returns the per-row survivor
+    count (B,) int32 — the realized T under the final threshold, the
+    ``WorkStats.candidates_selected`` calibration signal.  Paths that
+    answer by exact sort (degenerate T_pad ≥ N budget, tie-cluster
+    reroute) have no threshold and report the budget T itself.
     """
     d = jnp.asarray(d, jnp.float32)
     B, N = d.shape
@@ -114,7 +120,10 @@ def radius_select(d: jax.Array, T: int, *, T_pad: int | None = None,
         T_pad = T + max(256, T // 8)
     T_pad = min(max(T_pad, T), N)
     if T_pad >= N:  # degenerate budget: nothing to skip, sort it all
-        return topk_smallest(d, T)
+        vals, idx = topk_smallest(d, T)
+        if with_count:
+            return vals, idx, jnp.full((B,), T, jnp.int32)
+        return vals, idx
 
     samp = d[:, ::sample_stride]
     s = samp.shape[1]
@@ -143,8 +152,13 @@ def radius_select(d: jax.Array, T: int, *, T_pad: int | None = None,
     # threshold below T_pad survivors; dropping any of them would lose
     # true top-T members, so that case takes the exact sort instead
     cnt_hi = jnp.sum((d <= hi).astype(jnp.int32), axis=1)
-    return jax.lax.cond(jnp.any(cnt_hi > T_pad),
-                        lambda: topk_smallest(d, T), _compact)
+    vals, idx, cnt = jax.lax.cond(
+        jnp.any(cnt_hi > T_pad),
+        lambda: topk_smallest(d, T) + (jnp.full((B,), T, jnp.int32),),
+        lambda: _compact() + (cnt_hi.astype(jnp.int32),))
+    if with_count:
+        return vals, idx, cnt
+    return vals, idx
 
 
 def pair_join(x, key, k: int, *, thresh2: float, block_n: int = 128

@@ -30,7 +30,8 @@ __all__ = ["quant_ann_query", "quant_ann_query_traced", "quant_cp_search"]
 
 
 @partial(jax.jit,
-         static_argnames=("k", "T", "R", "store_raw", "force", "fused"))
+         static_argnames=("k", "T", "R", "store_raw", "force", "fused",
+                          "with_count"))
 def quant_ann_query(
     index: FlatIndex,
     codec: Codec,
@@ -43,7 +44,8 @@ def quant_ann_query(
     store_raw: bool = True,
     force: str | None = None,
     fused: bool = False,
-) -> tuple[jax.Array, jax.Array]:
+    with_count: bool = False,
+):
     """(c,k)-ANN over quantized storage.
 
     Args:
@@ -60,8 +62,12 @@ def quant_ann_query(
         gather-free VERIFY kernel for the exact tier — the ADC rerank
         slots in unchanged as the verify stage on codes.  Identical
         answers on ties-free data.
+      with_count: also return the T-select's per-query survivor counts
+        (B,) int32 (realized T → ``WorkStats.candidates_selected``);
+        the unfused rank cut has no radius and reports the budget T.
 
-    Returns (indices (B, k) int32, distances (B, k) float32).
+    Returns (indices (B, k) int32, distances (B, k) float32) plus the
+    counts when ``with_count``.
     """
     from repro.kernels import ops as kops
 
@@ -78,9 +84,11 @@ def quant_ann_query(
 
         m = index.params.m if index.params is not None else index.m
         tau0 = select_seed(d2p, T, m)
-        _, cand = kops.radius_select(d2p, T, tau0=tau0, force=force)
+        _, cand, cnt = kops.radius_select(d2p, T, tau0=tau0, force=force,
+                                          with_count=True)
     else:
         _, cand = jax.lax.top_k(-d2p, T)  # (B, T)
+        cnt = jnp.full((q.shape[0],), T, jnp.int32)
 
     # 3. rerank: ADC on the candidates' codes, keep the R best.
     # gather BEFORE widening: only B·T code rows are ever touched at
@@ -103,18 +111,19 @@ def quant_ann_query(
         # codes-only: the R-selection is already ascending in ADC distance
         idx = rcand[:, :k]
         dd = jnp.sqrt(jnp.maximum(-negR[:, :k], 0.0))
-        return idx.astype(jnp.int32), dd
-
-    # 4. verify: exact distances on the R survivors, through the kernel
-    # dispatch policy (force= now reaches the verify tier too)
-    if fused:
+        out = idx.astype(jnp.int32), dd
+    elif fused:
+        # 4. verify: exact distances on the R survivors, through the
+        # kernel dispatch policy (force= now reaches the verify tier too)
         d2, idx = kops.verify_topk(index.data, q, rcand, k, force=force)
-        return idx.astype(jnp.int32), jnp.sqrt(jnp.maximum(d2, 0.0))
-    cpts = index.data[rcand]  # (B, R, d)
-    d2 = kops.pairwise_sq_dist(q, cpts, force=force)  # (B, R)
-    negk, sel = jax.lax.top_k(-d2, k)
-    idx = jnp.take_along_axis(rcand, sel, axis=1)
-    return idx.astype(jnp.int32), jnp.sqrt(jnp.maximum(-negk, 0.0))
+        out = idx.astype(jnp.int32), jnp.sqrt(jnp.maximum(d2, 0.0))
+    else:
+        cpts = index.data[rcand]  # (B, R, d)
+        d2 = kops.pairwise_sq_dist(q, cpts, force=force)  # (B, R)
+        negk, sel = jax.lax.top_k(-d2, k)
+        idx = jnp.take_along_axis(rcand, sel, axis=1)
+        out = idx.astype(jnp.int32), jnp.sqrt(jnp.maximum(-negk, 0.0))
+    return out + (cnt,) if with_count else out
 
 
 def quant_ann_query_traced(
@@ -129,7 +138,8 @@ def quant_ann_query_traced(
     store_raw: bool = True,
     force: str | None = None,
     fused: bool = False,
-) -> tuple[jax.Array, jax.Array]:
+    with_count: bool = False,
+):
     """Stage-by-stage eager twin of :func:`quant_ann_query` for tracing.
 
     Identical math and answers; each tier runs outside jit under a
@@ -151,16 +161,21 @@ def quant_ann_query_traced(
         with tr.span("quant.estimate"):
             qp = index.family.project(q)
             d2p = kops.pairwise_sq_dist(qp, index.projected, force=force)
-        with tr.span("quant.select"):
+        with tr.span("quant.select") as sp:
             if fused:
                 from repro.core.fused import select_seed
 
                 m = index.params.m if index.params is not None else index.m
                 tau0 = select_seed(d2p, T, m)
-                _, cand = kops.radius_select(d2p, T, tau0=tau0, force=force)
+                _, cand, cnt = kops.radius_select(d2p, T, tau0=tau0,
+                                                  force=force,
+                                                  with_count=True)
             else:
                 _, cand = jax.lax.top_k(-d2p, T)
+                cnt = jnp.full((q.shape[0],), T, jnp.int32)
             otrace.block(cand)
+            if sp is not None:
+                sp.attrs["candidates_selected"] = int(jnp.sum(cnt))
         with tr.span("quant.rerank"):
             ccodes = jnp.asarray(codes)[cand]
             direct = getattr(codec, "adc_direct", None)
@@ -193,7 +208,7 @@ def quant_ann_query_traced(
                 out = (idx.astype(jnp.int32),
                        jnp.sqrt(jnp.maximum(-negk, 0.0)))
             out = otrace.block(*out)
-    return out
+    return out + (cnt,) if with_count else out
 
 
 def quant_cp_search(

@@ -25,14 +25,22 @@ p50/p99 stay unbiased estimates over the full request history.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import random
 
 import numpy as np
 
 from repro.index.types import WorkStats
+from repro.obs import metrics as obs_metrics
 
 __all__ = ["BucketSnapshot", "LatencyReservoir", "MetricsSnapshot",
            "ServeMetrics"]
+
+# distinct default seeds for successive reservoirs: with a SHARED seed
+# every reservoir walks the same RNG replacement stream, so the overall
+# and per-bucket samples over one request history keep/evict the same
+# slots in lockstep — correlated samples, correlated quantile error
+_SEED_SEQ = itertools.count(1)
 
 
 class LatencyReservoir:
@@ -42,16 +50,24 @@ class LatencyReservoir:
     with probability ``cap / i``, so at any point every observation so
     far had equal probability of being in the sample.  Quantiles over
     the sample estimate stream quantiles without ever holding more
-    than ``cap`` floats."""
+    than ``cap`` floats.
+
+    ``seed=None`` (the default) derives a distinct per-instance seed so
+    co-resident reservoirs sample independently; pass an explicit seed
+    only to make a SINGLE reservoir's trajectory reproducible."""
 
     __slots__ = ("cap", "count", "_samples", "_rng")
 
-    def __init__(self, cap: int = 4096, seed: int = 0):
+    def __init__(self, cap: int = 4096, seed: int | None = None):
         if cap < 1:
             raise ValueError(f"cap must be >= 1, got {cap}")
         self.cap = int(cap)
         self.count = 0  # observations ever seen
         self._samples: list[float] = []
+        if seed is None:
+            # golden-ratio multiplicative mix of the instance ordinal:
+            # deterministic per process, distinct per instance
+            seed = (next(_SEED_SEQ) * 0x9E3779B97F4A7C15) & (2**64 - 1)
         self._rng = random.Random(seed)
 
     def observe(self, value: float) -> None:
@@ -159,9 +175,20 @@ class ServeMetrics:
 
     ``latency_cap`` bounds quantile memory: the overall stream and
     each bucket shape keep at most that many latency samples (see
-    :class:`LatencyReservoir`)."""
+    :class:`LatencyReservoir`).
 
-    def __init__(self, clock, latency_cap: int = 4096):
+    Every event is ALSO mirrored into the process-global metrics
+    registry (``repro.obs.metrics``): ``serve_requests_total{event}``,
+    ``serve_cache_total{outcome}``, ``serve_flushes_total{reason}``,
+    ``serve_compile_total{outcome}``, and the
+    ``serve_latency_seconds{shape}`` histogram — so one Prometheus
+    endpoint exposes the serving stack next to the quality/drift
+    gauges.  Requests landing in the histogram's top range retain
+    their stage breakdown (queue-wait / search / deliver) as
+    exemplars; :meth:`slowest` returns them value-descending, the
+    answer to *why* a p99 request was slow."""
+
+    def __init__(self, clock, latency_cap: int = 4096, registry=None):
         self._clock = clock
         self._latency_cap = int(latency_cap)
         self._t0: float | None = None  # first submit
@@ -182,6 +209,24 @@ class ServeMetrics:
         #                      LatencyReservoir]
         self._buckets: dict[tuple[int, int], list] = {}
         self._latencies = LatencyReservoir(self._latency_cap)
+        reg = registry if registry is not None else obs_metrics.get_registry()
+        self._c_requests = reg.counter(
+            "serve_requests_total", "requests by lifecycle event",
+            labels=("event",))
+        self._c_cache = reg.counter(
+            "serve_cache_total", "query-cache probes", labels=("outcome",))
+        self._c_flushes = reg.counter(
+            "serve_flushes_total", "bucket flushes by trigger",
+            labels=("reason",))
+        self._c_compile = reg.counter(
+            "serve_compile_total", "step-fn compile-cache probes",
+            labels=("outcome",))
+        self._h_latency = reg.histogram(
+            "serve_latency_seconds", "request latency (submit to deliver)",
+            labels=("shape",))
+        self._c_selected = reg.counter(
+            "serve_candidates_selected_total",
+            "select-stage survivors (realized T) summed over flushes")
 
     # -- event recorders -------------------------------------------------
 
@@ -189,17 +234,23 @@ class ServeMetrics:
         if self._t0 is None:
             self._t0 = self._clock()
         self.submitted += n
+        self._c_requests.inc(n, event="submitted")
 
     def on_shed(self) -> None:
         self.shed += 1
+        self._c_requests.inc(event="shed")
 
     def on_cache_hit(self, latency_s: float) -> None:
         self.cache_hits += 1
         self.completed += 1
         self._latencies.observe(latency_s)
+        self._c_cache.inc(outcome="hit")
+        self._c_requests.inc(event="completed")
+        self._h_latency.observe(latency_s, shape="cache")
 
     def on_cache_miss(self) -> None:
         self.cache_misses += 1
+        self._c_cache.inc(outcome="miss")
 
     def _bucket_rec(self, shape: tuple[int, int]) -> list:
         rec = self._buckets.get(shape)
@@ -217,23 +268,42 @@ class ServeMetrics:
         counter = {"deadline": "deadline_flushes", "full": "full_flushes",
                    "forced": "forced_flushes"}[reason]
         setattr(self, counter, getattr(self, counter) + 1)
+        self._c_flushes.inc(reason=reason)
 
     def on_complete(self, shape: tuple[int, int], latency_s: float, *,
-                    degraded: bool = False) -> None:
+                    degraded: bool = False,
+                    breakdown: dict | None = None) -> None:
+        """``breakdown`` (optional) is the request's stage attribution
+        — e.g. ``{"queue_wait_ms": ..., "search_ms": ...}`` — kept as a
+        histogram exemplar when this latency ranks among the largest."""
         self.completed += 1
         if degraded:
             self.degraded += 1
         self._latencies.observe(latency_s)
         self._bucket_rec(shape)[3].observe(latency_s)
+        self._c_requests.inc(event="completed")
+        if degraded:
+            self._c_requests.inc(event="degraded")
+        self._h_latency.observe(latency_s, exemplar=breakdown,
+                                shape=f"{shape[0]}x{shape[1]}")
 
     def on_compile(self, hit: bool) -> None:
         if hit:
             self.compile_hits += 1
         else:
             self.compile_misses += 1
+        self._c_compile.inc(outcome="hit" if hit else "miss")
 
     def add_work(self, stats: WorkStats) -> None:
         self.work += stats
+        if stats.candidates_selected:
+            self._c_selected.inc(stats.candidates_selected)
+
+    def slowest(self, n: int = 5) -> list[tuple[float, dict]]:
+        """The n slowest completed requests that retained a stage
+        breakdown, as (latency_s, breakdown) descending — pooled over
+        every bucket shape."""
+        return self._h_latency.slowest(n)
 
     # -- snapshot --------------------------------------------------------
 

@@ -132,11 +132,18 @@ class RequestScheduler:
 
     def __init__(self, step, *, config: ServeConfig | None = None,
                  degraded_step=None,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 auditor=None, audit_budget: int = 4):
         self.step = step
         self.config = config or ServeConfig()
         self.degraded_step = degraded_step
         self.clock = clock
+        # optional shadow quality auditor (obs.quality.QualityAuditor):
+        # each delivered answer is offered for hash-sampling, and pump()
+        # scores up to ``audit_budget`` queued samples per call — the
+        # brute-force ground truth runs in idle ticks, never in a flush
+        self.auditor = auditor
+        self.audit_budget = int(audit_budget)
         self.palette = BucketPalette(self.config.b_max, self.config.k_max)
         self.metrics = ServeMetrics(clock)
         self.admission = AdmissionController(
@@ -292,6 +299,8 @@ class RequestScheduler:
                    * self.palette.b_pad(len(bucket)))
             if bucket.due(now, est):
                 completed += self._flush(bkey, reason="deadline")
+        if self.auditor is not None and self.audit_budget > 0:
+            self.auditor.audit(max_items=self.audit_budget)
         return completed
 
     def drain(self) -> int:
@@ -372,8 +381,27 @@ class RequestScheduler:
                                          degraded=r.degraded,
                                          latency_s=latency)
                     self._pending.pop(r.id, None)
-                    self.metrics.on_complete(shape, latency,
-                                             degraded=r.degraded)
+                    # stage attribution from the scheduler's own clock
+                    # stamps (works under fake clocks and without a
+                    # tracer): retained as a latency-histogram exemplar
+                    # when this request ranks among the slowest, so
+                    # metrics.slowest(n) explains the p99
+                    self.metrics.on_complete(
+                        shape, latency, degraded=r.degraded,
+                        breakdown={
+                            "rid": r.id,
+                            "shape": f"{b_pad}x{k_pad}",
+                            "tier": tier,
+                            "flush_reason": reason,
+                            "queue_wait_ms": round(
+                                max(t0 - r.submit_t, 0.0) * 1e3, 4),
+                            "search_ms": round(
+                                max(done_t - t0, 0.0) * 1e3, 4),
+                        })
+                    if (self.auditor is not None and not r.degraded
+                            and r.k == r.k_req):
+                        self.auditor.maybe_sample(r.query, sub.indices[0],
+                                                  sub.distances[0])
                     if self.cache is not None and r.cache_key is not None:
                         self.cache.put(r.cache_key, sub, version=version)
                     # deliver into the live ticket; a dropped ticket

@@ -100,6 +100,24 @@ class StreamingIndex(BaseIndex):
         self._by_serial: dict[int, Segment] = {}
         self.n_flushes = 0
         self.n_compactions = 0
+        # projection-drift monitor (obs.drift, DESIGN.md §13): inserted
+        # rows feed the projected-coordinate moments (host-side matmul
+        # against the build-time family — no jax dispatch per insert),
+        # and the per-segment fan-out feeds the select kernel's
+        # survivor counts into the occupancy histogram.  The first
+        # baseline rows (seed data + earliest inserts) freeze the
+        # build-time reference the live EWMA is compared against.
+        self.drift = None
+        self._drift_proj = None
+        if bool(opts.get("drift", True)):
+            from repro.core.hashing import ProjectionFamily
+            from repro.obs.drift import DriftMonitor
+
+            fam = ProjectionFamily.create(self.d, self.config.m,
+                                          seed=self.config.seed)
+            self._drift_proj = np.asarray(fam.a, dtype=np.float32)
+            self.drift = DriftMonitor(
+                baseline_rows=int(opts.get("drift_baseline", 256)))
         if self.data.shape[0]:
             self.insert(self.data)
         # the append-only store owns the rows now; keeping BaseIndex's
@@ -137,6 +155,8 @@ class StreamingIndex(BaseIndex):
         self._total += cnt
         self._n_live += cnt
         self.delta.insert(ids, x)
+        if self.drift is not None:
+            self.drift.observe_rows(x @ self._drift_proj)
         if len(self.delta) >= self.delta_threshold:
             self.flush()
         return ids
@@ -232,6 +252,12 @@ class StreamingIndex(BaseIndex):
                 id_blocks.append(gids)
                 dist_blocks.append(dd)
                 stats += st
+                # flat segments stash their last select survivor counts
+                # (realized T) — the drift monitor's occupancy signal
+                counts = getattr(seg.index, "last_select_counts", None)
+                if self.drift is not None and counts is not None:
+                    self.drift.observe_survivors(
+                        counts, getattr(seg.index, "last_select_budget", 0))
             with otrace.span("stream.delta", size=len(self.delta)):
                 gids, dd, st = self.delta.search(q, k, force=self._force)
             id_blocks.append(gids)
@@ -321,6 +347,11 @@ class StreamingIndex(BaseIndex):
     def total_assigned(self) -> int:
         """Ids ever assigned (monotone; tombstones included)."""
         return self._total
+
+    def drift_report(self):
+        """Current :class:`repro.obs.drift.DriftReport` (None when the
+        monitor is disabled via ``options={"drift": False}``)."""
+        return None if self.drift is None else self.drift.report()
 
     def bytes_per_point(self) -> float:
         """Resident distance-storage bytes per LIVE point: sealed

@@ -1,0 +1,274 @@
+"""Metrics registry: counters/gauges/histograms, bounded cardinality,
+snapshot/delta, exemplar retention, and Prometheus text exposition.
+
+The golden-format test pins the exposition output byte-for-byte so a
+scraper pointed at ``serve_metrics.prom`` never silently breaks.
+"""
+import numpy as np
+import pytest
+
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    get_registry,
+)
+
+
+def reg():
+    return MetricsRegistry()
+
+
+class TestCounter:
+    def test_inc_and_get(self):
+        c = reg().counter("c_total", "help", labels=("op",))
+        c.inc(op="a")
+        c.inc(2.5, op="a")
+        c.inc(op="b")
+        assert c.get(op="a") == 3.5
+        assert c.get(op="b") == 1.0
+        assert c.get(op="never") == 0.0
+
+    def test_monotone(self):
+        c = reg().counter("c_total")
+        with pytest.raises(ValueError):
+            c.inc(-1.0)
+
+    def test_label_mismatch_raises(self):
+        c = reg().counter("c_total", labels=("op",))
+        with pytest.raises(ValueError):
+            c.inc(wrong="x")
+        with pytest.raises(ValueError):
+            c.inc()  # missing the declared label
+
+    def test_invalid_names_rejected(self):
+        r = reg()
+        with pytest.raises(ValueError):
+            r.counter("bad name")
+        with pytest.raises(ValueError):
+            r.counter("ok_total", labels=("bad-label",))
+
+
+class TestGauge:
+    def test_set_inc_dec(self):
+        g = reg().gauge("g")
+        g.set(5.0)
+        g.inc(2.0)
+        g.dec(3.0)
+        assert g.get() == 4.0
+
+    def test_pull_time_fn(self):
+        """set_fn gauges sample the callable at collection time — the
+        tracer's drop counter pattern."""
+        g = reg().gauge("g")
+        box = {"v": 1.0}
+        g.set_fn(lambda: box["v"])
+        assert g.get() == 1.0
+        box["v"] = 7.0
+        assert g.get() == 7.0
+        assert g.collect()[()] == 7.0
+
+    def test_tracer_drop_gauge_registered_globally(self):
+        """Importing repro.obs wires the tracer's drop counter into the
+        global registry as a pull-time gauge."""
+        import repro.obs  # noqa: F401
+
+        g = get_registry().get("trace_dropped_spans")
+        assert g is not None and g.kind == "gauge"
+        assert g.get() >= 0.0
+
+
+class TestHistogram:
+    def test_bucket_placement_and_overflow(self):
+        h = Histogram("h_seconds", "", buckets=(0.1, 1.0))
+        for v in (0.05, 0.5, 0.7, 2.0):
+            h.observe(v)
+        rec = h._series[()]
+        assert rec.counts == [1, 2]
+        assert rec.overflow == 1
+        assert rec.total == 4
+        assert rec.sum == pytest.approx(3.25)
+
+    def test_exemplars_keep_largest(self):
+        h = Histogram("h_seconds", "", max_exemplars=3)
+        for i in range(10):
+            h.observe(float(i), exemplar={"rid": i})
+        top = h.slowest(3)
+        assert [e[0] for e in top] == [9.0, 8.0, 7.0]
+        assert [e[1]["rid"] for e in top] == [9, 8, 7]
+
+    def test_slowest_pools_series(self):
+        h = Histogram("h_seconds", "", labels=("shape",))
+        h.observe(1.0, exemplar={"who": "slow"}, shape="8x16")
+        h.observe(2.0, exemplar={"who": "slower"}, shape="1x8")
+        pooled = h.slowest(5)
+        assert [e[1]["who"] for e in pooled] == ["slower", "slow"]
+        only = h.slowest(5, shape="8x16")
+        assert [e[1]["who"] for e in only] == ["slow"]
+
+    def test_observations_without_exemplar_kept_out_of_slowest(self):
+        h = Histogram("h_seconds", "")
+        h.observe(100.0)
+        h.observe(1.0, exemplar={"a": 1})
+        assert [e[0] for e in h.slowest(5)] == [1.0]
+
+
+class TestCardinalityBound:
+    def test_counter_series_bounded(self):
+        c = Counter("c_total", "", labels=("rid",), max_series=4)
+        for i in range(100):
+            c.inc(rid=str(i))
+        assert c.series_count == 4
+        assert c.dropped_series == 96
+        # established series still accumulate past the bound
+        c.inc(rid="0")
+        assert c.get(rid="0") == 2.0
+
+    def test_histogram_series_bounded(self):
+        h = Histogram("h_seconds", "", labels=("rid",), max_series=2)
+        for i in range(10):
+            h.observe(0.5, rid=str(i))
+        assert h.series_count == 2
+        assert h.dropped_series == 8
+
+    def test_dropped_series_in_snapshot(self):
+        r = reg()
+        c = r.counter("c_total", labels=("rid",), max_series=1)
+        c.inc(rid="a")
+        c.inc(rid="b")
+        assert r.snapshot()["c_total"]["dropped_series"] == 1
+
+
+class TestRegistry:
+    def test_get_or_create_idempotent(self):
+        r = reg()
+        a = r.counter("c_total", "first", labels=("op",))
+        b = r.counter("c_total", "second", labels=("op",))
+        assert a is b
+
+    def test_kind_or_label_mismatch_raises(self):
+        r = reg()
+        r.counter("x_total", labels=("op",))
+        with pytest.raises(ValueError):
+            r.gauge("x_total")
+        with pytest.raises(ValueError):
+            r.counter("x_total", labels=("other",))
+
+    def test_snapshot_json_safe_and_delta(self):
+        import json
+
+        r = reg()
+        c = r.counter("req_total", labels=("op",))
+        g = r.gauge("depth")
+        h = r.histogram("lat_seconds", buckets=(0.1, 1.0))
+        c.inc(3, op="a")
+        g.set(5.0)
+        h.observe(0.05)
+        prev = r.snapshot()
+        json.dumps(prev)  # plain dicts end to end
+        c.inc(2, op="a")
+        c.inc(op="b")
+        g.set(9.0)
+        h.observe(0.5)
+        cur = r.snapshot()
+        d = MetricsRegistry.delta(cur, prev)
+        assert d["req_total"]["series"]["op=a"] == 2.0
+        assert d["req_total"]["series"]["op=b"] == 1.0  # absent → vs 0
+        assert d["depth"]["series"][""] == 9.0  # gauges pass through
+        hs = d["lat_seconds"]["series"][""]
+        assert hs["count"] == 1 and hs["buckets"][1.0] == 1
+        assert hs["sum"] == pytest.approx(0.5)
+
+    def test_global_registry_is_singleton(self):
+        assert get_registry() is get_registry()
+
+
+class TestPrometheusExposition:
+    def test_golden_format(self):
+        """Byte-for-byte golden: HELP/TYPE headers, sorted series,
+        escaped label values, cumulative histogram buckets with +Inf,
+        _sum/_count."""
+        r = reg()
+        c = r.counter("req_total", "requests", labels=("op",))
+        c.inc(2, op="read")
+        c.inc(op='wr"ite\n')
+        r.gauge("depth", "queue depth").set(3.5)
+        h = r.histogram("lat_seconds", "latency", buckets=(0.1, 1.0))
+        h.observe(0.05)
+        h.observe(0.05)
+        h.observe(0.5)
+        h.observe(9.0)
+        expected = (
+            '# HELP depth queue depth\n'
+            '# TYPE depth gauge\n'
+            'depth 3.5\n'
+            '# HELP lat_seconds latency\n'
+            '# TYPE lat_seconds histogram\n'
+            'lat_seconds_bucket{le="0.1"} 2\n'
+            'lat_seconds_bucket{le="1"} 3\n'
+            'lat_seconds_bucket{le="+Inf"} 4\n'
+            'lat_seconds_sum 9.6\n'
+            'lat_seconds_count 4\n'
+            '# HELP req_total requests\n'
+            '# TYPE req_total counter\n'
+            'req_total{op="read"} 2\n'
+            'req_total{op="wr\\"ite\\n"} 1\n'
+        )
+        assert r.to_prometheus() == expected
+
+    def test_parseable_shape(self):
+        """Every non-comment line is `<series> <float>`."""
+        r = reg()
+        r.counter("a_total").inc()
+        r.gauge("b", labels=("x",)).set(1.0, x="v 1")
+        h = r.histogram("c_seconds")
+        h.observe(0.2)
+        for line in r.to_prometheus().strip().split("\n"):
+            if line.startswith("#"):
+                assert line.split(" ")[1] in ("HELP", "TYPE")
+                continue
+            series, value = line.rsplit(" ", 1)
+            float(value)  # must parse
+            assert series[0].isidentifier() or series[0] == "_"
+
+    def test_empty_registry(self):
+        assert reg().to_prometheus() == ""
+
+
+class TestServeMetricsRouting:
+    """ServeMetrics mirrors its counters through the registry (PR 8
+    re-route) — one scrape covers the serving stack."""
+
+    def test_events_mirrored(self):
+        from repro.serve.metrics import ServeMetrics
+
+        r = reg()
+        m = ServeMetrics(clock=lambda: 0.0, registry=r)
+        m.on_submit(3)
+        m.on_shed()
+        m.on_cache_miss()
+        m.on_flush((8, 16), real=5, reason="deadline")
+        m.on_complete((8, 16), 0.002,
+                      breakdown={"queue_wait_ms": 1.0, "search_ms": 0.8})
+        m.on_cache_hit(0.0001)
+        m.on_compile(hit=False)
+        assert r.get("serve_requests_total").get(event="submitted") == 3
+        assert r.get("serve_requests_total").get(event="shed") == 1
+        assert r.get("serve_requests_total").get(event="completed") == 2
+        assert r.get("serve_cache_total").get(outcome="hit") == 1
+        assert r.get("serve_flushes_total").get(reason="deadline") == 1
+        assert r.get("serve_compile_total").get(outcome="miss") == 1
+        top = m.slowest(1)
+        assert top and top[0][1]["search_ms"] == 0.8
+
+    def test_candidates_selected_total(self):
+        from repro.index.types import WorkStats
+        from repro.serve.metrics import ServeMetrics
+
+        r = reg()
+        m = ServeMetrics(clock=lambda: 0.0, registry=r)
+        m.add_work(WorkStats(candidates_selected=120))
+        m.add_work(WorkStats(candidates_selected=80))
+        assert r.get("serve_candidates_selected_total").get() == 200
+        assert m.work.candidates_selected == 200

@@ -496,6 +496,27 @@ class TestLatencyReservoir:
             r.observe(x)
         assert r.samples() == [1.0, 2.0, 3.0]
 
+    def test_default_seeds_are_independent(self):
+        """Regression: default-seeded reservoirs used to share seed=0,
+        so co-resident reservoirs fed the same stream kept/evicted the
+        same slots in lockstep — correlated quantile error.  Two fresh
+        reservoirs over one stream must now retain different samples."""
+        from repro.serve.metrics import LatencyReservoir
+
+        a, b = LatencyReservoir(cap=32), LatencyReservoir(cap=32)
+        for i in range(4096):
+            v = float(i)
+            a.observe(v)
+            b.observe(v)
+        assert a.samples() != b.samples()
+        # explicit seeds still reproduce a single trajectory
+        c, d = LatencyReservoir(cap=32, seed=7), LatencyReservoir(
+            cap=32, seed=7)
+        for i in range(4096):
+            c.observe(float(i))
+            d.observe(float(i))
+        assert c.samples() == d.samples()
+
 
 class TestWorkStats:
     def test_round_trip(self):

@@ -1,0 +1,433 @@
+"""Quality layer: shadow auditor (recall / ratio / Lemma-3 CI coverage),
+projection-drift monitor, and the realized-T counter they consume.
+
+The auditor tests use planted answers so recall is EXACT, not
+statistical; the CI-coverage calibration test runs on Gaussian data
+where the χ²(m) model of Lemma 1/2 holds by construction.
+"""
+import numpy as np
+import pytest
+
+from conftest import make_clustered
+
+from repro.obs.drift import DriftMonitor
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.quality import QualityAuditor, ci_coverage, sample_decision
+
+
+def reg():
+    return MetricsRegistry()
+
+
+# ---------------------------------------------------------------------------
+# deterministic hash sampler
+# ---------------------------------------------------------------------------
+
+
+class TestSampleDecision:
+    def test_deterministic_and_replayable(self):
+        q = np.arange(8, dtype=np.float32).tobytes()
+        first = sample_decision(q, 0.5, seed=1)
+        assert all(sample_decision(q, 0.5, seed=1) == first
+                   for _ in range(10))
+
+    def test_edges(self):
+        q = b"anything"
+        assert not sample_decision(q, 0.0, seed=0)
+        assert sample_decision(q, 1.0, seed=0)
+
+    def test_fraction_respected(self):
+        rng = np.random.default_rng(0)
+        qs = [rng.normal(size=8).astype(np.float32).tobytes()
+              for _ in range(2000)]
+        hits = sum(sample_decision(q, 0.1, seed=3) for q in qs)
+        assert 120 <= hits <= 280  # ~Binomial(2000, 0.1)
+
+    def test_seed_changes_subset(self):
+        rng = np.random.default_rng(0)
+        qs = [rng.normal(size=8).astype(np.float32).tobytes()
+              for _ in range(500)]
+        a = {i for i, q in enumerate(qs) if sample_decision(q, 0.2, seed=0)}
+        b = {i for i, q in enumerate(qs) if sample_decision(q, 0.2, seed=1)}
+        assert a != b
+
+
+# ---------------------------------------------------------------------------
+# Lemma 3 / Eq. 9 coverage
+# ---------------------------------------------------------------------------
+
+
+class TestCiCoverage:
+    def test_calibrated_on_chi2_model(self):
+        """Feed ratios drawn from the exact χ²(m) model: measured
+        coverage matches nominal 1−2α to Monte-Carlo accuracy."""
+        rng = np.random.default_rng(0)
+        m, n = 15, 20000
+        r = rng.uniform(1.0, 5.0, size=n)
+        rp = r * np.sqrt(rng.chisquare(m, size=n))
+        for alpha in (0.05, 1.0 / np.e):
+            inside, total = ci_coverage(r, rp, m, alpha)
+            assert total == n
+            assert abs(inside / total - (1 - 2 * alpha)) < 0.02
+
+    def test_zero_distance_pairs_excluded(self):
+        inside, total = ci_coverage(
+            np.array([0.0, 1.0]), np.array([0.0, 4.0]), 15, 0.25)
+        assert total == 1
+
+    def test_gaussian_projection_end_to_end(self):
+        """Real ProjectionFamily on Gaussian data: measured coverage
+        within tolerance of nominal (fixed seeds → deterministic)."""
+        from repro.core.hashing import ProjectionFamily
+
+        rng = np.random.default_rng(5)
+        d, m, alpha = 32, 15, 1.0 / np.e
+        data = rng.normal(size=(1500, d)).astype(np.float32)
+        inside = total = 0
+        for seed in range(4):
+            fam = ProjectionFamily.create(d, m, seed=seed)
+            proj = np.asarray(fam.project(data))
+            for qi in range(3):
+                q = data[qi] + 0.05 * rng.normal(size=d).astype(np.float32)
+                dd = np.linalg.norm(data - q, axis=-1)
+                nn = np.argsort(dd)[:50]
+                qp = np.asarray(fam.project(q[None]))[0]
+                rp = np.linalg.norm(proj[nn] - qp, axis=-1)
+                i, t = ci_coverage(dd[nn], rp, m, alpha)
+                inside += i
+                total += t
+        measured, nominal = inside / total, 1 - 2 * alpha
+        assert abs(measured - nominal) < 0.08, (measured, nominal)
+
+
+# ---------------------------------------------------------------------------
+# shadow auditor
+# ---------------------------------------------------------------------------
+
+
+def _planted_auditor(registry, **kw):
+    """10 points on a line: exact kNN of any query is unambiguous."""
+    rows = np.zeros((10, 4), np.float32)
+    rows[:, 0] = np.arange(10)
+    ids = np.arange(10, dtype=np.int64)
+    return rows, QualityAuditor(lambda: (ids, rows), registry=registry,
+                                sample_fraction=1.0, **kw)
+
+
+class TestAuditorRecall:
+    def test_planted_recall_exact(self):
+        """Serve 2-of-3 right answers → recall is exactly 2/3."""
+        rows, aud = _planted_auditor(reg())
+        q = rows[0] + 0.01  # true 3-NN: ids 0, 1, 2
+        served = np.array([0, 1, 7])  # one wrong
+        dd = np.linalg.norm(rows[served] - q, axis=-1)
+        assert aud.maybe_sample(q, served, dd)
+        aud.audit()
+        rep = aud.report()
+        assert rep.recall == pytest.approx(2.0 / 3.0)
+        assert rep.audited == 1 and rep.pending == 0
+
+    def test_perfect_answer_ratio_one(self):
+        rows, aud = _planted_auditor(reg())
+        q = rows[0] + 0.01
+        served = np.array([0, 1, 2])
+        dd = np.linalg.norm(rows[served] - q, axis=-1)
+        aud.maybe_sample(q, served, dd)
+        aud.audit()
+        rep = aud.report()
+        assert rep.recall == 1.0
+        assert rep.ratio == pytest.approx(1.0, abs=1e-5)
+
+    def test_wrong_answer_inflates_ratio(self):
+        rows, aud = _planted_auditor(reg())
+        q = rows[0] + 0.01
+        served = np.array([0, 1, 9])  # id 9 is far: ratio > 1
+        dd = np.linalg.norm(rows[served] - q, axis=-1)
+        aud.maybe_sample(q, served, dd)
+        aud.audit()
+        assert aud.report().ratio > 1.5
+
+    def test_accounting_identity_under_overflow(self):
+        rows, aud = _planted_auditor(reg(), max_pending=3)
+        q0 = rows[0] + 0.01
+        for i in range(8):
+            q = q0 + i * 1e-4
+            served = np.array([0, 1, 2])
+            dd = np.linalg.norm(rows[served] - q, axis=-1)
+            aud.maybe_sample(q, served, dd)
+        assert aud.sampled == 3 and aud.overflowed == 5
+        assert aud.audited == aud.sampled - aud.pending == 0
+        aud.audit(max_items=2)
+        assert aud.audited == 2 and aud.pending == 1
+        assert aud.audited == aud.sampled - aud.pending
+        aud.audit()
+        assert aud.audited == aud.sampled == 3 and aud.pending == 0
+
+    def test_gauges_published(self):
+        r = reg()
+        rows, aud = _planted_auditor(r)
+        q = rows[0] + 0.01
+        served = np.array([0, 1, 2])
+        aud.maybe_sample(q, served,
+                         np.linalg.norm(rows[served] - q, axis=-1))
+        aud.audit()
+        assert r.get("quality_recall").get() == 1.0
+        assert r.get("quality_sampled_total").get() == 1
+        assert r.get("quality_audited_total").get() == 1
+
+    def test_for_index_audits_facade(self):
+        """for_index wiring: audit a flat backend's own answers —
+        recall 1.0, ratio 1.0, coverage pairs scored."""
+        from repro.index import IndexConfig, build_index
+
+        data = make_clustered(256, 16, seed=2)
+        index = build_index(data, IndexConfig(backend="flat", seed=0))
+        aud = QualityAuditor.for_index(index, sample_fraction=1.0,
+                                       registry=reg())
+        res = index.search(data[:6] + 0.01, 5)
+        for q, ids, dd in zip(data[:6] + 0.01, res.indices, res.distances):
+            aud.maybe_sample(q, ids, dd)
+        aud.audit()
+        rep = aud.report()
+        assert rep.audited == 6
+        assert rep.recall == 1.0
+        assert rep.ratio == pytest.approx(1.0, abs=1e-4)
+        assert rep.coverage_pairs > 0
+        assert 0.0 <= rep.ci_coverage <= 1.0
+
+    def test_alarming(self):
+        from repro.obs.quality import QualityReport
+
+        good = QualityReport(sampled=100, audited=100, pending=0,
+                             recall=0.99, ratio=1.0, ci_coverage=0.26,
+                             nominal_coverage=0.264, coverage_pairs=500,
+                             alpha=1 / np.e)
+        assert not good.alarming()
+        bad = QualityReport(sampled=100, audited=100, pending=0,
+                            recall=0.99, ratio=1.0, ci_coverage=0.15,
+                            nominal_coverage=0.264, coverage_pairs=500,
+                            alpha=1 / np.e)
+        assert bad.alarming()
+        # too few pairs: no alarm regardless of the gap
+        assert not QualityReport(
+            sampled=2, audited=2, pending=0, recall=1.0, ratio=1.0,
+            ci_coverage=0.0, nominal_coverage=0.264, coverage_pairs=10,
+            alpha=1 / np.e).alarming()
+
+
+# ---------------------------------------------------------------------------
+# drift monitor
+# ---------------------------------------------------------------------------
+
+
+class TestDrift:
+    def test_quiet_on_stationary(self):
+        rng = np.random.default_rng(0)
+        mon = DriftMonitor(baseline_rows=200, registry=reg())
+        for _ in range(20):
+            mon.observe_rows(rng.normal(size=(50, 15)))
+        rep = mon.report()
+        assert rep.mean_shift < 0.25
+        assert rep.var_ratio < 0.3
+        assert not rep.recalibrate
+
+    def test_fires_on_mean_shift(self):
+        rng = np.random.default_rng(0)
+        mon = DriftMonitor(baseline_rows=200, registry=reg())
+        for _ in range(8):
+            mon.observe_rows(rng.normal(size=(50, 15)))
+        for _ in range(8):
+            mon.observe_rows(rng.normal(size=(50, 15)) + 3.0)
+        rep = mon.report()
+        assert rep.mean_shift > 1.0
+        assert rep.recalibrate
+
+    def test_fires_on_variance_shift(self):
+        rng = np.random.default_rng(0)
+        mon = DriftMonitor(baseline_rows=200, registry=reg())
+        for _ in range(8):
+            mon.observe_rows(rng.normal(size=(50, 15)))
+        for _ in range(8):
+            mon.observe_rows(rng.normal(size=(50, 15)) * 4.0)
+        rep = mon.report()
+        assert rep.var_ratio > 1.0
+        assert rep.recalibrate
+
+    def test_occupancy_tv_fires_on_shift(self):
+        rng = np.random.default_rng(0)
+        r = reg()
+        mon = DriftMonitor(baseline_rows=64, registry=r)
+        # baseline: survivors cluster low in the budget
+        while mon._occ_base.sum() < 64:
+            mon.observe_survivors(rng.integers(5, 30, size=16), budget=100)
+        for _ in range(8):  # live: survivors near the budget
+            mon.observe_survivors(rng.integers(80, 100, size=16), budget=100)
+        rep = mon.report()
+        assert rep.occupancy_tv > 0.5
+        assert rep.recalibrate
+        assert r.get("drift_recalibrate").get() == 1.0
+
+    def test_occupancy_quiet_on_same_distribution(self):
+        rng = np.random.default_rng(0)
+        mon = DriftMonitor(baseline_rows=64, registry=reg())
+        for _ in range(20):
+            mon.observe_survivors(rng.integers(5, 30, size=16), budget=100)
+        rep = mon.report()
+        assert rep.occupancy_tv < 0.2
+        assert not rep.recalibrate
+
+    def test_projects_through_family(self):
+        from repro.core.hashing import ProjectionFamily
+
+        fam = ProjectionFamily.create(16, 15, seed=0)
+        rng = np.random.default_rng(0)
+        mon = DriftMonitor(fam, baseline_rows=100, registry=reg())
+        for _ in range(10):
+            mon.observe_rows(rng.normal(size=(40, 16)).astype(np.float32))
+        rep = mon.report()
+        assert rep.baseline_rows >= 100 * 15
+        assert not rep.recalibrate
+
+    def test_streaming_index_integration(self):
+        """StreamingIndex wires the monitor by default: stationary
+        inserts stay quiet, shifted inserts raise recalibrate; segment
+        searches feed the survivor-occupancy signal."""
+        from repro.index import IndexConfig, build_index
+
+        data = make_clustered(256, 16, seed=4)
+        cfg = IndexConfig(backend="streaming", seed=0,
+                          options={"delta_threshold": 64,
+                                   "drift_baseline": 128})
+        index = build_index(data, cfg)
+        rng = np.random.default_rng(1)
+        for _ in range(4):
+            index.insert(make_clustered(64, 16, seed=int(rng.integers(99))))
+        index.search(data[:4], 5)
+        rep = index.drift_report()
+        assert not rep.recalibrate
+        # a hard shift in the insert stream must raise the flag
+        for _ in range(6):
+            index.insert(
+                rng.normal(size=(64, 16)).astype(np.float32) * 5 + 10)
+        assert index.drift_report().recalibrate
+
+
+# ---------------------------------------------------------------------------
+# realized T (WorkStats.candidates_selected)
+# ---------------------------------------------------------------------------
+
+
+class TestRealizedT:
+    def test_workstats_add_sums_field(self):
+        from repro.index.types import WorkStats
+
+        s = WorkStats(candidates_selected=3) + WorkStats(
+            candidates_selected=4)
+        assert s.candidates_selected == 7
+
+    @pytest.mark.parametrize("options", [
+        {"fused": True}, {"fused": False}, {"quant": "sq8"},
+    ])
+    def test_flat_paths_report_selected(self, options):
+        from repro.index import IndexConfig, build_index
+
+        data = make_clustered(512, 16, seed=0)
+        index = build_index(
+            data, IndexConfig(backend="flat", seed=0, options=options))
+        res = index.search(data[:4] + 0.01, 5)
+        assert res.stats.candidates_selected > 0
+        assert res.stats.candidates_selected == int(
+            index.last_select_counts.sum())
+        assert index.last_select_counts.shape == (4,)
+        assert index.last_select_budget > 0
+        # the radius path reports the survivors inside the final τ —
+        # at least the T budget (the ladder stops once cnt ≥ T), at
+        # most the index; rank-cut paths report exactly T
+        assert (index.last_select_counts >=
+                index.last_select_budget).all()
+        assert (index.last_select_counts <= len(data)).all()
+
+    def test_fused_radius_path_counts_real_survivors(self):
+        """The fused radius path reports points inside the final τ —
+        bounded by the budget, not constant-equal to it."""
+        import jax.numpy as jnp
+
+        from repro.kernels import ops as kops
+
+        rng = np.random.default_rng(0)
+        d = jnp.asarray(rng.uniform(0.1, 10.0, size=(4, 512)),
+                        jnp.float32)
+        vals, idx, cnt = kops.radius_select(d, 32, with_count=True,
+                                            force="ref")
+        cnt = np.asarray(cnt)
+        assert cnt.shape == (4,)
+        assert (cnt >= 32).all()  # at least the budget survives τ
+        # counts are the point of with_count: same answer either way
+        v2, i2 = kops.radius_select(d, 32, force="ref")
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(i2))
+
+    def test_streaming_sums_segments(self):
+        from repro.index import IndexConfig, build_index
+
+        data = make_clustered(384, 16, seed=0)
+        index = build_index(
+            data, IndexConfig(backend="streaming", seed=0,
+                              options={"delta_threshold": 64,
+                                       "segment_backend": "flat"}))
+        res = index.search(data[:4] + 0.01, 5)
+        assert res.stats.candidates_selected > 0
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration
+# ---------------------------------------------------------------------------
+
+
+class TestSchedulerAuditor:
+    def test_samples_served_requests(self):
+        from repro.index import IndexConfig
+        from repro.serve import RequestScheduler, ServeConfig
+        from repro.serve.serve_step import make_retrieval_step
+
+        data = make_clustered(256, 16, seed=3)
+        step, index = make_retrieval_step(
+            data, np.arange(len(data)), k=8,
+            index_config=IndexConfig(backend="flat", seed=0))
+        aud = QualityAuditor.for_index(index, sample_fraction=1.0,
+                                       registry=reg())
+        sched = RequestScheduler(step, config=ServeConfig(
+            b_max=8, k_max=16, cache=False, default_deadline_ms=1e6,
+            max_queue=1024), auditor=aud)
+        tickets = [sched.submit(data[i] + 0.01, k=5) for i in range(24)]
+        sched.drain()
+        assert all(t.result().ok for t in tickets)
+        aud.audit()  # drain what the pump budget left over
+        rep = aud.report()
+        assert aud.sampled == 24
+        assert rep.audited == 24 and rep.pending == 0
+        assert rep.recall == 1.0
+        assert aud.audited == aud.sampled - aud.pending
+
+    def test_pump_drains_audit_queue_incrementally(self):
+        from repro.index import IndexConfig
+        from repro.serve import RequestScheduler, ServeConfig
+        from repro.serve.serve_step import make_retrieval_step
+
+        data = make_clustered(256, 16, seed=3)
+        step, index = make_retrieval_step(
+            data, np.arange(len(data)), k=8,
+            index_config=IndexConfig(backend="flat", seed=0))
+        aud = QualityAuditor.for_index(index, sample_fraction=1.0,
+                                       registry=reg())
+        sched = RequestScheduler(step, config=ServeConfig(
+            b_max=4, k_max=16, cache=False, default_deadline_ms=1e6,
+            max_queue=1024), auditor=aud, audit_budget=2)
+        for i in range(8):
+            sched.submit(data[i] + 0.01, k=5)
+        sched.drain()
+        before = aud.audited
+        sched.pump()  # idle pump keeps auditing at most audit_budget
+        assert aud.audited - before <= 2
+        while aud.pending:
+            sched.pump()
+        assert aud.audited == aud.sampled == 8
