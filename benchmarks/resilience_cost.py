@@ -1,0 +1,217 @@
+"""Durability & resilience cost benchmark (ISSUE 9, DESIGN.md §14).
+
+Three questions, three sections:
+
+  1. What does the WAL cost on the ingest path?  Streaming inserts
+     timed three ways — no durability, WAL with fsync per append
+     (``sync=True``), WAL with OS-buffered appends (``sync=False``) —
+     reported as p50/p99 per insert call.
+
+  2. How does recovery time scale with log length?  ``recover()``
+     timed against WALs of growing record counts, with and without a
+     snapshot covering the prefix (the snapshot turns O(records)
+     replay into O(tail)).
+
+  3. What does the hedge ladder buy under stragglers?  A serve trace
+     where the primary tier stalls 100 ms with probability ~15%,
+     measured with the hedge enabled vs disabled.  The deadline ladder
+     abandons the straggler at its budget, so hedge-on converts
+     would-be failures/timeouts into degraded-tier answers and cuts
+     the tail.
+
+Self-gating acceptance: hedge-on must fail no more requests than
+hedge-off AND must actually hedge; the sync=True ingest path must not
+be catastrophically (> 200x) slower than no-durability.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from .common import csv_row, latency_quantiles_us, publish_summary
+
+D = 24
+CHUNK = 16
+
+
+def _stream_cfg(durability: dict | None):
+    from repro.index import IndexConfig
+
+    options = {"delta_threshold": 100_000, "max_segments": 16,
+               "max_dead_fraction": 1.0}
+    if durability is not None:
+        options["durability"] = durability
+    return IndexConfig(backend="streaming", seed=0, options=options)
+
+
+def _insert_latency(data, n_inserts: int, durability: dict | None):
+    from repro.index import build_index
+
+    index = build_index(data[:CHUNK], _stream_cfg(durability))
+    samples = []
+    pos = CHUNK
+    for _ in range(n_inserts):
+        chunk = data[pos: pos + CHUNK]
+        pos += CHUNK
+        t0 = time.perf_counter()
+        index.insert(chunk)
+        samples.append(time.perf_counter() - t0)
+    index.close()
+    return latency_quantiles_us(samples)
+
+
+def _wal_cost(out, rng, quick: bool):
+    n_inserts = 100 if quick else 400
+    data = rng.standard_normal(
+        ((n_inserts + 1) * CHUNK, D)).astype(np.float32)
+    variants = []
+    for name, dur in [("wal_off", None),
+                      ("wal_sync", {"sync": True}),
+                      ("wal_nosync", {"sync": False})]:
+        tmp = Path(tempfile.mkdtemp(prefix="bench_wal_"))
+        try:
+            if dur is not None:
+                dur = {"dir": str(tmp / "idx"), **dur}
+            q = _insert_latency(data, n_inserts, dur)
+            variants.append((name, q))
+            out.append(csv_row(
+                f"insert_{name}", q["mean_us"],
+                f"p50_us={q['p50_us']:.1f};p99_us={q['p99_us']:.1f};"
+                f"rows_per_insert={CHUNK}"))
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+    base = dict(variants)["wal_off"]["p50_us"]
+    sync = dict(variants)["wal_sync"]["p50_us"]
+    overhead = sync / max(base, 1e-9)
+    publish_summary("wal_cost",
+                    p50_off_us=base, p50_sync_us=sync,
+                    p50_nosync_us=dict(variants)["wal_nosync"]["p50_us"],
+                    sync_overhead_x=overhead)
+    assert overhead < 200, (
+        f"WAL sync path {overhead:.0f}x over baseline — fsync batching "
+        f"regressed")
+
+
+def _recovery_scaling(out, rng, quick: bool):
+    from repro.index import build_index
+    from repro.resilience import recover
+
+    sizes = [64, 256, 1024] if quick else [256, 1024, 4096]
+    data = rng.standard_normal(
+        ((max(sizes) + 1) * 4, D)).astype(np.float32)
+    summary = {}
+    for n_records, snapshot in [(s, False) for s in sizes] + [
+            (max(sizes), True)]:
+        tmp = Path(tempfile.mkdtemp(prefix="bench_rec_"))
+        try:
+            dur = {"dir": str(tmp / "idx"), "sync": False}
+            index = build_index(data[:4], _stream_cfg(dur))
+            for i in range(n_records - 1):
+                index.insert(data[4 * (i + 1): 4 * (i + 2)])
+                if snapshot and i == n_records - 8:
+                    index.snapshot()  # covers all but the last few
+            index.close()
+            t0 = time.perf_counter()
+            recovered, report = recover(tmp / "idx")
+            wall = time.perf_counter() - t0
+            recovered.close()
+            tag = f"recover_n{n_records}" + ("_snap" if snapshot else "")
+            out.append(csv_row(
+                tag, wall * 1e6,
+                f"records_replayed={report.records_replayed};"
+                f"snapshot={int(report.snapshot_lsn is not None)};"
+                f"rows={recovered.n}"))
+            summary[tag] = {"wall_ms": wall * 1e3,
+                            "replayed": report.records_replayed}
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+    publish_summary("recovery_scaling", **{
+        k: v["wall_ms"] for k, v in summary.items()})
+
+
+def _hedge_tail(out, rng, quick: bool):
+    from repro.index import IndexConfig
+    from repro.resilience import FaultPlan, FaultSpec, chaos
+    from repro.serve import RequestScheduler, ServeConfig
+    from repro.serve.serve_step import make_retrieval_step
+
+    n, d, k = 2048, 16, 8
+    n_requests = 192 if quick else 384
+    deadline_ms = 25.0
+    keys = rng.standard_normal((n, d)).astype(np.float32)
+    queries = (keys[rng.integers(0, n, n_requests)]
+               + rng.normal(size=(n_requests, d))
+               .astype(np.float32) * 0.1)
+
+    results = {}
+    for hedge in (True, False):
+        step, _ = make_retrieval_step(keys, np.arange(n), k=k)
+        degraded, _ = make_retrieval_step(
+            keys, np.arange(n), k=k,
+            index_config=IndexConfig(backend="flat", seed=0,
+                                     options={"quant": "sq8",
+                                              "rerank": 32}))
+        sched = RequestScheduler(
+            step, degraded_step=degraded,
+            config=ServeConfig(b_max=8, max_queue=4096, cache=False,
+                               hedge=hedge,
+                               default_deadline_ms=deadline_ms))
+        # warm BOTH tiers across the pow2 batch shapes the ladder can
+        # reach (hedge answers and quarantine sub-batches), so the tail
+        # measures the faults, not one-time jit compiles
+        for b in (1, 2, 4, 8):
+            z = np.zeros((b, d), np.float32)
+            step.index.search(z, k=k)
+            degraded.index.search(z, k=k)
+        warm = [sched.submit(q, k=k) for q in queries[:32]]
+        sched.drain()
+        [t.result() for t in warm]
+        # 100ms stragglers: every abandoned attempt burns the full
+        # deadline budget, so back-to-back stragglers exhaust the
+        # ladder unless the hedge reroutes to the degraded tier
+        plan = FaultPlan([FaultSpec("serve.search", "latency", prob=0.3,
+                                    times=0, latency_s=0.1)], seed=7)
+        tickets = []
+        with chaos.active(plan):
+            for q in queries:
+                tickets.append(sched.submit(q, k=k,
+                                            deadline_ms=deadline_ms))
+            sched.drain()
+        resps = [t.result() for t in tickets]
+        lat = np.asarray([r.latency_s for r in resps if r.ok], np.float64)
+        snap = sched.snapshot()
+        results[hedge] = {
+            "p50_us": float(np.percentile(lat, 50)) * 1e6,
+            "p99_us": float(np.percentile(lat, 99)) * 1e6,
+            "failed": snap.failed, "hedges": snap.hedges,
+            "retries": snap.retries, "ok": int(len(lat)),
+        }
+        tag = "hedge_on" if hedge else "hedge_off"
+        out.append(csv_row(
+            f"straggler_{tag}", results[hedge]["p99_us"],
+            f"p50_us={results[hedge]['p50_us']:.0f};"
+            f"p99_us={results[hedge]['p99_us']:.0f};"
+            f"failed={snap.failed};hedges={snap.hedges};"
+            f"retries={snap.retries}"))
+    on, off = results[True], results[False]
+    publish_summary("hedge_tail",
+                    p99_on_us=on["p99_us"], p99_off_us=off["p99_us"],
+                    failed_on=on["failed"], failed_off=off["failed"],
+                    hedges=on["hedges"])
+    assert on["hedges"] > 0, "straggler trace never hedged"
+    assert on["failed"] <= off["failed"], (
+        f"hedge-on failed more requests ({on['failed']}) than hedge-off "
+        f"({off['failed']})")
+
+
+def run(quick: bool = True):
+    rng = np.random.default_rng(0)
+    out = []
+    _wal_cost(out, rng, quick)
+    _recovery_scaling(out, rng, quick)
+    _hedge_tail(out, rng, quick)
+    return out

@@ -38,6 +38,7 @@ MODULES = [
     ("stream_queries", "benchmarks.stream_queries"),
     ("quant_tradeoff", "benchmarks.quant_tradeoff"),
     ("serve_load", "benchmarks.serve_load"),
+    ("resilience", "benchmarks.resilience_cost"),
 ]
 
 

@@ -199,6 +199,10 @@ def check_serve(data, rng) -> None:
     assert snap.submitted == snap.completed + snap.shed == len(trace), (
         f"shed accounting broken: {snap.submitted} submitted, "
         f"{snap.completed} completed, {snap.shed} shed")
+    assert snap.submitted == (snap.completed + snap.shed + snap.failed
+                              + snap.pending), (
+        "full accounting identity broken: submitted != "
+        "completed + shed + failed + pending")
     assert snap.compile_misses == len(sched.compile_shapes), (
         "compile counter diverged from executed shapes")
 

@@ -90,9 +90,27 @@ class BaseIndex:
         k = int(k if k is not None else self.config.default_k)
         if k < 1:
             raise ValueError(f"k must be >= 1, got {k}")
+        # non-finite query rows would poison any distance pipeline
+        # (NaN propagates through every comparison, returning arbitrary
+        # neighbors with no signal): substitute a benign zero row for
+        # the backend, then mask those rows to the sentinel answer
+        # (-1 / +inf) and count them in WorkStats.queries_rejected
+        bad_rows = ~np.isfinite(q).all(axis=1)
+        n_bad = int(bad_rows.sum())
+        if n_bad:
+            q = np.where(bad_rows[:, None], np.float32(0.0), q)
         with otrace.span("index.search", backend=self.backend_name,
                          B=int(q.shape[0]), k=k) as sp:
             res = self._search(q, min(k, self.n))
+            if n_bad:
+                # np.where builds fresh arrays — backends may hand back
+                # read-only views of device buffers
+                res = SearchResult(
+                    np.where(bad_rows[:, None], np.int32(-1), res.indices),
+                    np.where(bad_rows[:, None], np.float32(np.inf),
+                             res.distances),
+                    stats=res.stats)
+                res.stats.queries_rejected += n_bad
             if sp is not None:
                 sp.attrs["work"] = res.stats.as_dict()
         if res.k < k:  # k > n: keep the (B, k) contract via padding

@@ -47,6 +47,10 @@ class WorkStats:
     # it is NOT added into total_distance_computations again.
     pairs_verified: int = 0
     tiles_pruned: int = 0
+    # facade-level hygiene: query rows masked to sentinel results
+    # because they carried NaN/Inf (appended LAST — as_dict/from_dict
+    # tolerate the skew, and older positional constructions stay valid)
+    queries_rejected: int = 0
 
     def __add__(self, other: "WorkStats") -> "WorkStats":
         return WorkStats(**{

@@ -8,7 +8,11 @@ Layout:  <dir>/step_<N>/
                                  incomplete and ignored on restore
 
 Fault-tolerance properties:
-  * atomic commit via COMMIT marker + tmpdir rename;
+  * atomic commit via the shared :func:`repro.resilience.fsio.commit_dir`
+    protocol — shard/manifest payloads are fsynced, then the tmpdir,
+    then the COMMIT marker, *then* the rename (a COMMIT that exists
+    implies every byte it vouches for is durable; a power cut can
+    leave a stale ``.tmp`` but never a committed-yet-torn checkpoint);
   * `save_async` runs serialization on a background thread so the train
     loop keeps stepping (double-buffered: at most one pending save);
   * `restore` reshards into ANY new mesh (elastic up/down-scaling):
@@ -28,6 +32,8 @@ from typing import Any
 import jax
 import msgpack
 import numpy as np
+
+from repro.resilience.fsio import commit_dir
 
 _FLOAT_MAP = {"bfloat16": np.uint16}  # np has no bf16; store raw bits
 
@@ -72,11 +78,9 @@ def save(ckpt_dir: str | os.PathLike, step: int, tree: Any,
         "extra": extra or {},
     }
     (tmp / "manifest.msgpack").write_bytes(msgpack.packb(manifest))
-    (tmp / "COMMIT").write_text("ok")
     if base.exists():
         shutil.rmtree(base)
-    tmp.rename(base)
-    return base
+    return commit_dir(tmp, base)
 
 
 class AsyncCheckpointer:
@@ -140,7 +144,19 @@ def restore(ckpt_dir: str | os.PathLike, step: int, like: Any,
     if not (base / "COMMIT").exists():
         raise FileNotFoundError(f"no committed checkpoint at {base}")
     manifest = msgpack.unpackb((base / "manifest.msgpack").read_bytes())
-    data = np.load(base / "shard_0.npz")
+    import zipfile
+
+    try:
+        data = np.load(base / "shard_0.npz")
+    except (OSError, ValueError, zipfile.BadZipFile) as e:
+        # pre-fsync-era checkpoints could commit a torn shard (COMMIT
+        # reached disk before the payload did); surface that as
+        # corruption, not an incidental parse failure
+        raise RuntimeError(
+            f"checkpoint {base} is committed but its shard payload is "
+            f"unreadable ({e}); the checkpoint predates durable commits "
+            f"or the disk corrupted it — fall back to an older step"
+        ) from e
     leaves_like, treedef = jax.tree.flatten(like)
     if manifest["n_leaves"] != len(leaves_like):
         raise ValueError(

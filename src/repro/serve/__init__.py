@@ -45,6 +45,7 @@ from .metrics import (  # noqa: F401
     ServeMetrics,
 )
 from .scheduler import (  # noqa: F401
+    RejectedQuery,
     RequestScheduler,
     Response,
     ServeConfig,
@@ -59,7 +60,7 @@ __all__ = [
     "BucketPalette", "PAD_DISTANCE", "StagingBuffers", "pow2_ceil",
     "SQ8QueryCache",
     "BucketSnapshot", "MetricsSnapshot", "ServeMetrics",
-    "RequestScheduler", "Response", "ServeConfig", "Ticket",
+    "RejectedQuery", "RequestScheduler", "Response", "ServeConfig", "Ticket",
     *_LAZY,
 ]
 

@@ -11,10 +11,12 @@ cache hit rate, shed rate, and padding overhead (padded slots that
 carried no real query).
 
 Accounting invariant (asserted by the serve conformance gate in
-scripts/check_api.py): ``submitted == completed + shed + pending`` —
-every submitted request is exactly one of answered, shed, or still
-queued.  Cache hits complete without a flush, so they appear in
-``completed`` but in no bucket's slot counts.
+scripts/check_api.py): ``submitted == completed + shed + failed +
+pending`` — every submitted request is exactly one of answered, shed,
+quarantine-failed, or still queued.  Queries refused at ``submit()``
+(``rejected``) never enter ``submitted`` at all.  Cache hits complete
+without a flush, so they appear in ``completed`` but in no bucket's
+slot counts.
 
 Latency memory is BOUNDED: quantiles come from fixed-capacity
 :class:`LatencyReservoir`s (Vitter's Algorithm R), not unbounded
@@ -138,6 +140,12 @@ class MetricsSnapshot:
     p99_us: float
     buckets: tuple[BucketSnapshot, ...]
     work: WorkStats
+    # resilience counters (defaulted: appended after the seed fields)
+    failed: int = 0  # quarantine-isolated poison requests
+    rejected: int = 0  # refused at submit() (never counted submitted)
+    retries: int = 0  # ladder retries after a failed/timed-out search
+    hedges: int = 0  # flushes hedged to the degraded tier
+    quarantine_flushes: int = 0  # bisection sub-flushes
 
     @property
     def qps(self) -> float:
@@ -203,7 +211,12 @@ class ServeMetrics:
         self.deadline_flushes = 0
         self.full_flushes = 0
         self.forced_flushes = 0
+        self.quarantine_flushes = 0
         self.staging_reuses = 0
+        self.failed = 0
+        self.rejected = 0
+        self.retries = 0
+        self.hedges = 0
         self.work = WorkStats()
         # per-(B_pad, k_pad): [flushes, real_slots, padded_slots,
         #                      LatencyReservoir]
@@ -227,6 +240,18 @@ class ServeMetrics:
         self._c_selected = reg.counter(
             "serve_candidates_selected_total",
             "select-stage survivors (realized T) summed over flushes")
+        self._c_retries = reg.counter(
+            "serve_retries_total",
+            "ladder retries after a failed or timed-out search")
+        self._c_hedges = reg.counter(
+            "serve_hedges_total", "flushes hedged to the degraded tier")
+        self._c_breaker = reg.counter(
+            "serve_breaker_transitions_total",
+            "degraded-tier circuit-breaker transitions", labels=("to",))
+        self._g_breaker = reg.gauge(
+            "serve_breaker_state",
+            "breaker state (0 closed, 1 open, 2 half_open)",
+            labels=("tier",))
 
     # -- event recorders -------------------------------------------------
 
@@ -239,6 +264,36 @@ class ServeMetrics:
     def on_shed(self) -> None:
         self.shed += 1
         self._c_requests.inc(event="shed")
+
+    def on_reject(self) -> None:
+        """Query refused at submit() — never entered ``submitted``."""
+        self.rejected += 1
+        self._c_requests.inc(event="rejected")
+
+    def on_failed(self) -> None:
+        """Quarantine isolated a poison request and failed it solo."""
+        self.failed += 1
+        self._c_requests.inc(event="failed")
+
+    def on_retry(self) -> None:
+        self.retries += 1
+        self._c_retries.inc()
+
+    def on_hedge(self) -> None:
+        self.hedges += 1
+        self._c_hedges.inc()
+
+    def on_cache_error(self) -> None:
+        """Cache probe raised (injected or real): served the full path."""
+        self.cache_misses += 1
+        self._c_cache.inc(outcome="error")
+
+    def on_breaker_transition(self, old: str, new: str) -> None:
+        self._c_breaker.inc(to=new)
+
+    def bind_breaker(self, state_fn, tier: str = "degraded") -> None:
+        """Export a breaker's live state as a pull-time gauge."""
+        self._g_breaker.set_fn(state_fn, tier=tier)
 
     def on_cache_hit(self, latency_s: float) -> None:
         self.cache_hits += 1
@@ -266,7 +321,8 @@ class ServeMetrics:
         rec[1] += real
         rec[2] += shape[0]
         counter = {"deadline": "deadline_flushes", "full": "full_flushes",
-                   "forced": "forced_flushes"}[reason]
+                   "forced": "forced_flushes",
+                   "quarantine": "quarantine_flushes"}[reason]
         setattr(self, counter, getattr(self, counter) + 1)
         self._c_flushes.inc(reason=reason)
 
@@ -319,7 +375,8 @@ class ServeMetrics:
         return MetricsSnapshot(
             submitted=self.submitted, completed=self.completed,
             shed=self.shed, degraded=self.degraded,
-            pending=self.submitted - self.completed - self.shed,
+            pending=(self.submitted - self.completed - self.shed
+                     - self.failed),
             cache_hits=self.cache_hits, cache_misses=self.cache_misses,
             compile_hits=self.compile_hits,
             compile_misses=self.compile_misses,
@@ -329,4 +386,7 @@ class ServeMetrics:
             staging_reuses=self.staging_reuses,
             queue_depth=queue_depth, wall_s=wall, p50_us=p50, p99_us=p99,
             buckets=tuple(buckets), work=self.work,
+            failed=self.failed, rejected=self.rejected,
+            retries=self.retries, hedges=self.hedges,
+            quarantine_flushes=self.quarantine_flushes,
         )

@@ -43,6 +43,7 @@ cache-invalidating ``extend``/``evict`` wrappers).  Clock injection
 from __future__ import annotations
 
 import dataclasses
+import random
 import time
 import weakref
 from typing import Callable
@@ -51,6 +52,9 @@ import numpy as np
 
 from repro.index.types import SearchResult
 from repro.obs import trace as otrace
+from repro.resilience import chaos
+from repro.resilience.breaker import CircuitBreaker
+from repro.resilience.chaos import ChaosError
 
 from .admission import DEGRADE, SHED, AdmissionController
 from .batcher import (PAD_DISTANCE, Bucket, BucketPalette, PendingRequest,
@@ -58,7 +62,19 @@ from .batcher import (PAD_DISTANCE, Bucket, BucketPalette, PendingRequest,
 from .cache import SQ8QueryCache
 from .metrics import MetricsSnapshot, ServeMetrics
 
-__all__ = ["ServeConfig", "Response", "Ticket", "RequestScheduler"]
+__all__ = ["ServeConfig", "Response", "Ticket", "RequestScheduler",
+           "RejectedQuery"]
+
+
+class RejectedQuery(ValueError):
+    """A query refused at ``submit()`` before it could poison a padded
+    batch: non-finite values, wrong shape, or an unconvertible dtype.
+    ``reason`` is machine-readable ("nonfinite" | "shape" | "dtype")."""
+
+    def __init__(self, reason: str, detail: str):
+        self.reason = reason
+        self.detail = detail
+        super().__init__(f"query rejected ({reason}): {detail}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +91,13 @@ class ServeConfig:
     cache_capacity: int = 1024
     degrade_k: int | None = None  # k clamp when no degraded_step (default k//2)
     service_ewma_alpha: float = 0.25  # service-time estimate smoothing
+    # -- resilience ladder (DESIGN.md §14) -------------------------------
+    retry_backoff_ms: float = 1.0  # base for the jittered pre-retry backoff
+    hedge: bool = True  # failed retry may hedge to the degraded tier
+    breaker_window: int = 16  # sliding outcome window on degraded_step
+    breaker_threshold: float = 0.5  # failure rate that trips OPEN
+    breaker_min_calls: int = 4  # outcomes required before tripping
+    breaker_reset_s: float = 5.0  # OPEN dwell before a HALF_OPEN probe
 
 
 @dataclasses.dataclass
@@ -82,7 +105,7 @@ class Response:
     """The terminal state of one submitted request."""
 
     id: int
-    status: str  # "ok" | "shed"
+    status: str  # "ok" | "shed" | "failed" | "rejected"
     result: SearchResult | None = None  # (1, k_req), facade contract
     payloads: np.ndarray | None = None  # values gathered for valid slots
     valid: np.ndarray | None = None  # (1, k_req) bool
@@ -167,6 +190,20 @@ class RequestScheduler:
         # response instead of leaking it in a scheduler-side table
         self._tickets: dict[int, weakref.ref[Ticket]] = {}
         self._next_id = 0
+        # resilience ladder state: jittered-backoff RNG (deterministic),
+        # injectable sleep, and the circuit breaker guarding the
+        # degraded tier (OPEN routes degraded buckets back to primary
+        # and suppresses hedging until the reset probe succeeds)
+        self._jitter_rng = random.Random(0x5EED)
+        self._sleep: Callable[[float], None] = time.sleep
+        self.breaker = CircuitBreaker(
+            window=self.config.breaker_window,
+            failure_threshold=self.config.breaker_threshold,
+            min_calls=self.config.breaker_min_calls,
+            reset_timeout_s=self.config.breaker_reset_s,
+            clock=clock,
+            on_transition=self.metrics.on_breaker_transition)
+        self.metrics.bind_breaker(self.breaker.state_code)
 
     def _train_cache_codec(self, index) -> None:
         """Give the cache an SQ8 key codec trained on real datastore
@@ -200,12 +237,12 @@ class RequestScheduler:
         """Enqueue one query; returns a :class:`Ticket` immediately.
 
         Cache hits and shed requests resolve on the spot; everything
-        else waits in a bucket until a full/deadline/forced flush."""
+        else waits in a bucket until a full/deadline/forced flush.
+        Malformed queries (NaN/Inf, wrong shape, unconvertible dtype)
+        raise :class:`RejectedQuery` BEFORE entering any batch — one
+        poison row must not spoil B_pad-1 neighbors."""
         now = self.clock()
-        q = np.asarray(query, np.float32).reshape(-1)
-        if q.size != self.step.index.d:
-            raise ValueError(f"query has d={q.size}, index d="
-                             f"{self.step.index.d}")
+        q = self._validate_query(query)
         k = int(k if k is not None else self.step.k)
         if k < 1:
             raise ValueError(f"k must be >= 1, got {k}")
@@ -214,19 +251,27 @@ class RequestScheduler:
         self._next_id += 1
 
         cache_key = None
+        hit = None
         if self.cache is not None:
             # key() degrades to exact-bytes keying when no codec could
             # be trained/adopted — never train on the queries themselves
             # (a single-query grid collapses and distant queries collide)
-            cache_key = self.cache.key(q, k)
-            hit = self.cache.get(cache_key,
-                                 version=getattr(self.step, "version", 0))
+            try:
+                chaos.hit("serve.cache")
+                cache_key = self.cache.key(q, k)
+                hit = self.cache.get(cache_key,
+                                     version=getattr(self.step, "version", 0))
+            except ChaosError:
+                # a failing cache is never fatal: serve the full path
+                cache_key, hit = None, None
+                self.metrics.on_cache_error()
             if hit is not None:
                 resp = self._respond(rid, hit, self.step, cached=True,
                                      latency_s=self.clock() - now)
                 self.metrics.on_cache_hit(resp.latency_s)
                 return Ticket(self, rid, resp)
-            self.metrics.on_cache_miss()
+            if cache_key is not None:  # real probe, not an injected error
+                self.metrics.on_cache_miss()
 
         action = self.admission.decide(len(self._pending))
         if action == SHED:
@@ -262,15 +307,46 @@ class RequestScheduler:
             self._flush(bkey, reason="full")
         return ticket
 
+    def _validate_query(self, query) -> np.ndarray:
+        """Normalize one query to a finite float32 (d,) vector or raise
+        :class:`RejectedQuery` — the serve-side guarantee that no
+        NaN/Inf/misshapen row ever enters a padded batch."""
+        try:
+            q = np.asarray(query, np.float32).reshape(-1)
+        except (TypeError, ValueError) as e:
+            self.metrics.on_reject()
+            raise RejectedQuery("dtype", str(e)) from e
+        if q.size != self.step.index.d:
+            self.metrics.on_reject()
+            raise RejectedQuery(
+                "shape", f"query has d={q.size}, index d={self.step.index.d}")
+        if not np.isfinite(q).all():
+            self.metrics.on_reject()
+            raise RejectedQuery(
+                "nonfinite",
+                f"{int((~np.isfinite(q)).sum())} non-finite values")
+        return q
+
     def submit_batch(self, queries, k: int | None = None,
                      deadline_ms: float | None = None) -> list[Ticket]:
-        Q = np.atleast_2d(np.asarray(queries, np.float32))
-        return [self.submit(q, k, deadline_ms) for q in Q]
+        """Per-row ``submit``; a row that fails validation yields an
+        already-resolved ticket with status "rejected" instead of
+        raising, so one poison row cannot veto its batchmates."""
+        Q = np.atleast_2d(np.asarray(queries))
+        out = []
+        for q in Q:
+            try:
+                out.append(self.submit(q, k, deadline_ms))
+            except RejectedQuery:
+                rid = self._next_id
+                self._next_id += 1
+                out.append(Ticket(self, rid, Response(rid, "rejected")))
+        return out
 
     def search(self, queries, k: int | None = None) -> SearchResult:
         """Synchronous convenience: submit a batch, resolve every
         ticket, reassemble the facade-shaped (B, k) SearchResult.
-        Shed rows come back as all-padding (-1 / +inf)."""
+        Shed/rejected/failed rows come back as all-padding (-1 / +inf)."""
         k = int(k if k is not None else self.step.k)
         tickets = self.submit_batch(queries, k)
         indices = np.full((len(tickets), k), -1, np.int32)
@@ -312,33 +388,137 @@ class RequestScheduler:
 
     def _flush(self, bkey: tuple[int, str], reason: str) -> int:
         bucket = self._buckets[bkey]
+        # injected lost flush (chaos "serve.flush"): the scheduler tick
+        # is dropped BEFORE the bucket drains, so requests stay queued
+        # and a later pump serves them — delayed, never lost.  Forced
+        # flushes (result()/drain) are a caller blocking on the answer
+        # and are exempt.
+        if reason != "forced" and chaos.dropped("serve.flush"):
+            return 0
         reqs = bucket.take_all()
         if not reqs:
             return 0
+        # a dropped flush leaves the bucket over-full; serve it in
+        # b_max chunks so staging never overflows a palette shape
+        done = 0
+        for i in range(0, len(reqs), self.config.b_max):
+            done += self._execute(reqs[i: i + self.config.b_max], bkey,
+                                  reason, depth=0)
+        return done
+
+    # -- the deadline-enforcement ladder ---------------------------------
+
+    def _search_tier(self, tier: str, Q: np.ndarray, k_pad: int,
+                     budget_s: float) -> SearchResult:
+        """One attempt against one tier.  Degraded-tier outcomes feed
+        the circuit breaker; chaos latency faults model a call
+        abandoned at its budget (ChaosLatencyExceeded ≙ timeout)."""
+        if tier == "degraded":
+            try:
+                chaos.hit("serve.degraded", budget_s)
+                res = self.degraded_step.index.search(Q, k=k_pad)
+            except Exception:
+                self.breaker.record_failure()
+                raise
+            self.breaker.record_success()
+            return res
+        chaos.hit("serve.search", budget_s)
+        return self.step.index.search(Q, k=k_pad)
+
+    def _guarded_search(self, tier: str, Q: np.ndarray, k_pad: int,
+                        budget_s: float, *, ladder: bool
+                        ) -> tuple[SearchResult, str]:
+        """The retry/hedge ladder (DESIGN.md §14): attempt → one retry
+        with jittered backoff → hedge to the degraded tier (breaker
+        permitting).  Returns (result, tier that answered).  With
+        ``ladder=False`` (quarantine sub-batches) it is a single
+        attempt."""
+        try:
+            return self._search_tier(tier, Q, k_pad, budget_s), tier
+        except Exception:
+            if not ladder:
+                raise
+            backoff = (self.config.retry_backoff_ms / 1e3
+                       * (0.5 + self._jitter_rng.random()))
+            self._sleep(backoff)
+            self.metrics.on_retry()
+            try:
+                return self._search_tier(tier, Q, k_pad, budget_s), tier
+            except Exception:
+                if (tier == "primary" and self.config.hedge
+                        and self.degraded_step is not None
+                        and self.breaker.allow()):
+                    self.metrics.on_hedge()
+                    return (self._search_tier("degraded", Q, k_pad,
+                                              budget_s), "degraded")
+                raise
+
+    def _fail(self, r: PendingRequest, latency_s: float) -> None:
+        """Terminal failure of ONE isolated request: the poison is
+        failed solo, its batchmates already completed."""
+        self.metrics.on_failed()
+        self._pending.pop(r.id, None)
+        tref = self._tickets.pop(r.id, None)
+        ticket = tref() if tref is not None else None
+        if ticket is not None:
+            ticket._response = Response(r.id, "failed", latency_s=latency_s)
+
+    def _execute(self, reqs: list[PendingRequest], bkey: tuple[int, str],
+                 reason: str, depth: int) -> int:
         k_pad, tier = bkey
-        step = self.degraded_step if tier == "degraded" else self.step
+        # an OPEN breaker routes degraded-bucket flushes back to the
+        # primary tier rather than hammering a failing dependency
+        serve_tier = tier
+        if tier == "degraded" and not self.breaker.allow():
+            serve_tier = "primary"
+        step = (self.degraded_step if serve_tier == "degraded"
+                else self.step)
         b_pad = self.palette.b_pad(len(reqs))
         shape = (b_pad, k_pad)
-        with otrace.span("serve.flush", reason=reason, tier=tier,
+        with otrace.span("serve.flush", reason=reason, tier=serve_tier,
                          b_pad=b_pad, k_pad=k_pad, real=len(reqs)) as fsp:
             self.metrics.on_flush(shape, real=len(reqs), reason=reason)
             self.metrics.on_compile(
-                hit=(b_pad, k_pad, tier) in self._seen_shapes)
-            self._seen_shapes.add((b_pad, k_pad, tier))
+                hit=(b_pad, k_pad, serve_tier) in self._seen_shapes)
+            self._seen_shapes.add((b_pad, k_pad, serve_tier))
 
-            skey = (b_pad, tier)
+            skey = (b_pad, serve_tier)
             staging = self._staging.get(skey)
             if staging is None:
-                staging = self._staging[skey] = StagingBuffers(b_pad,
-                                                               step.index.d)
+                staging = self._staging[skey] = StagingBuffers(
+                    b_pad, self.step.index.d)
             with otrace.span("serve.stage"):
                 Q = staging.stage([r.query for r in reqs])
             if staging.reuses > 0:
                 self.metrics.staging_reuses += 1
 
             t0 = self.clock()
-            with otrace.span("serve.search"):
-                res = step.index.search(Q, k=k_pad)
+            # the ladder's abandon budget: slack to the most patient
+            # deadline in the batch, floored so a just-expired batch
+            # still gets a real attempt
+            budget = max(max(r.deadline for r in reqs) - t0, 1e-3)
+            try:
+                with otrace.span("serve.search"):
+                    res, answered = self._guarded_search(
+                        serve_tier, Q, k_pad, budget, ladder=depth == 0)
+            except Exception:
+                # ladder exhausted.  A single request is the isolated
+                # poison: fail it solo.  A batch is bisected — each
+                # half retried as its own (ladder-less) quarantine
+                # flush, so one poison request costs O(log B) extra
+                # flushes while its batchmates still complete.
+                if len(reqs) == 1:
+                    self._fail(reqs[0], self.clock() - reqs[0].submit_t)
+                    return 1
+                mid = len(reqs) // 2
+                done = self._execute(reqs[:mid], bkey, "quarantine",
+                                     depth + 1)
+                done += self._execute(reqs[mid:], bkey, "quarantine",
+                                      depth + 1)
+                return done
+            hedged = answered != serve_tier
+            step = (self.degraded_step if answered == "degraded"
+                    else self.step)
             # normalize to per-slot time so the estimate transfers
             # across batch widths (pump() scales it back up by the
             # projected B_pad)
@@ -378,7 +558,7 @@ class RequestScheduler:
                         sub = SearchResult(pad_i, pad_d)
                     latency = done_t - r.submit_t
                     resp = self._respond(r.id, sub, step,
-                                         degraded=r.degraded,
+                                         degraded=r.degraded or hedged,
                                          latency_s=latency)
                     self._pending.pop(r.id, None)
                     # stage attribution from the scheduler's own clock
@@ -387,11 +567,11 @@ class RequestScheduler:
                     # when this request ranks among the slowest, so
                     # metrics.slowest(n) explains the p99
                     self.metrics.on_complete(
-                        shape, latency, degraded=r.degraded,
+                        shape, latency, degraded=r.degraded or hedged,
                         breakdown={
                             "rid": r.id,
                             "shape": f"{b_pad}x{k_pad}",
-                            "tier": tier,
+                            "tier": answered,
                             "flush_reason": reason,
                             "queue_wait_ms": round(
                                 max(t0 - r.submit_t, 0.0) * 1e3, 4),
@@ -399,10 +579,13 @@ class RequestScheduler:
                                 max(done_t - t0, 0.0) * 1e3, 4),
                         })
                     if (self.auditor is not None and not r.degraded
-                            and r.k == r.k_req):
+                            and not hedged and r.k == r.k_req):
                         self.auditor.maybe_sample(r.query, sub.indices[0],
                                                   sub.distances[0])
-                    if self.cache is not None and r.cache_key is not None:
+                    # hedged answers came from the degraded tier: never
+                    # cached, same as natively degraded responses
+                    if (self.cache is not None and not hedged
+                            and r.cache_key is not None):
                         self.cache.put(r.cache_key, sub, version=version)
                     # deliver into the live ticket; a dropped ticket
                     # means the caller walked away — the response is

@@ -31,7 +31,11 @@ options: ``delta_threshold`` (flush trigger, default 512),
 ``segment_backend`` (default "pmtree"; "flat" when ``quant`` is set),
 ``max_segments`` (compaction trigger, default 4), ``max_dead_fraction``
 (segment rot trigger, default 0.5), ``use_kernels`` (delta-scan
-dispatch, default True).  Unrecognized options (e.g. ``fused``,
+dispatch, default True), ``durability`` (crash consistency, DESIGN.md
+§14: ``{"dir": path, "sync": True, "snapshot_every": 0}`` attaches a
+``repro.resilience`` WAL — every mutation is logged before memory
+changes — plus atomic snapshots every N records; rebuild after a crash
+with ``repro.resilience.recover(dir)``).  Unrecognized options (e.g. ``fused``,
 ``quant``, ``rerank``) pass through to the segment backend, so the
 per-segment fan-out of a ``"flat"``/``"flat-pq"``-segmented index runs
 the fused estimate→select→verify pipeline (DESIGN.md §9) — by size
@@ -50,6 +54,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.obs import trace as otrace
+from repro.resilience import chaos
 
 from repro.index.backends import BaseIndex
 from repro.index.registry import register_backend
@@ -118,6 +123,20 @@ class StreamingIndex(BaseIndex):
             self._drift_proj = np.asarray(fam.a, dtype=np.float32)
             self.drift = DriftMonitor(
                 baseline_rows=int(opts.get("drift_baseline", 256)))
+        # durability (DESIGN.md §14): WAL-before-memory logging + atomic
+        # snapshots, attached BEFORE the seed insert so seed rows are
+        # logged too.  A dir that already holds a durable index must go
+        # through resilience.recover(), not a fresh build.
+        self.durability = None
+        dur = opts.get("durability")
+        if dur:
+            from repro.resilience.recovery import DurabilityManager
+
+            self.durability = DurabilityManager(
+                dur["dir"], d=self.d, config=self.config, fresh=True,
+                sync=bool(dur.get("sync", True)),
+                snapshot_every=int(dur.get("snapshot_every", 0)),
+                snapshot_keep=int(dur.get("snapshot_keep", 2)))
         if self.data.shape[0]:
             self.insert(self.data)
         # the append-only store owns the rows now; keeping BaseIndex's
@@ -148,6 +167,11 @@ class StreamingIndex(BaseIndex):
         if cnt == 0:
             return np.empty((0,), dtype=np.int64)
         ids = np.arange(self._total, self._total + cnt, dtype=np.int64)
+        # WAL-before-memory: the record is durable before any state
+        # changes, so a crash here loses nothing already acknowledged
+        if self.durability is not None:
+            self.durability.log_insert(self._total, x)
+        chaos.hit("stream.apply")
         self._grow_to(self._total + cnt)
         self._store[ids] = x
         self._alive[ids] = True
@@ -175,6 +199,9 @@ class StreamingIndex(BaseIndex):
         targets = ids[self._alive[ids]]
         if targets.size == 0:
             return 0
+        if self.durability is not None:
+            self.durability.log_delete(targets)
+        chaos.hit("stream.apply")
         self._alive[targets] = False
         self._n_live -= int(targets.size)
         in_delta = self.delta.delete(targets)
@@ -188,16 +215,24 @@ class StreamingIndex(BaseIndex):
         """Seal the delta into an immutable segment (no-op when empty)."""
         if len(self.delta) == 0:
             return
+        if chaos.dropped("stream.flush"):
+            return  # injected lost flush: rows stay served from delta
         # build the segment BEFORE draining so a failed build (bad
-        # segment_backend, ...) leaves every live row still served
+        # segment_backend, ...) leaves every live row still served —
+        # and is never WAL'd, so replay cannot re-raise it
         seg = Segment(self.delta.ids, self.delta.vectors, self.config,
                       self.segment_backend)
+        if self.durability is not None:
+            self.durability.log_flush()
+        chaos.hit("stream.apply")
         ids, _ = self.delta.take()
         self._owner[ids] = seg.serial
         self._by_serial[seg.serial] = seg
         self.segments.append(seg)
         self.n_flushes += 1
         self._maybe_compact()
+        if self.durability is not None:
+            self.durability.maybe_snapshot(self)
 
     # -- compaction ------------------------------------------------------
 
@@ -222,6 +257,10 @@ class StreamingIndex(BaseIndex):
         # build must leave every live row still owned by a source
         seg = (Segment(live, self._store[live], self.config,
                        self.segment_backend) if live.size else None)
+        # compaction is a deterministic consequence of the op sequence;
+        # its WAL record is an audit marker and replays as a no-op
+        if self.durability is not None:
+            self.durability.log_compact()
         gone = {s.serial for s in victims}
         self.segments = [s for s in self.segments if s.serial not in gone]
         for serial in gone:
@@ -332,6 +371,22 @@ class StreamingIndex(BaseIndex):
             stats=WorkStats(candidates_verified=r.pairs_verified,
                             pairs_verified=r.pairs_verified,
                             tiles_pruned=r.tiles_pruned))
+
+    # -- durability ------------------------------------------------------
+
+    def snapshot(self):
+        """Write an atomic on-disk snapshot now and rotate the WAL
+        (requires ``options={"durability": {...}}``).  Returns the
+        committed snapshot directory."""
+        if self.durability is None:
+            raise RuntimeError(
+                "snapshot() requires options={'durability': {'dir': ...}}")
+        return self.durability.snapshot(self)
+
+    def close(self) -> None:
+        """Flush and close the WAL handle (no-op without durability)."""
+        if self.durability is not None:
+            self.durability.close()
 
     # -- introspection ---------------------------------------------------
 

@@ -19,7 +19,8 @@ __all__ = ["Segment"]
 # stream-orchestration knobs that must not leak into the static
 # backend's option namespace when a segment is built
 _STREAM_OPTIONS = ("segment_backend", "delta_threshold", "max_segments",
-                   "max_dead_fraction", "drift", "drift_baseline")
+                   "max_dead_fraction", "drift", "drift_baseline",
+                   "durability")
 
 
 def segment_config(config: IndexConfig, backend: str) -> IndexConfig:

@@ -1,0 +1,743 @@
+"""Tests for repro.resilience — durability & chaos (DESIGN.md §14).
+
+The acceptance bar is the kill-point sweep: a simulated crash at EVERY
+WAL/snapshot boundary of an op script must recover to a state exactly
+equal (live ids + search results) to a never-crashed twin that applied
+the durable prefix of the script.  Around it: WAL torn-tail and
+corruption semantics, atomic-snapshot refusal of bit-flipped segments,
+the chaos harness itself, the circuit breaker, the serve retry/hedge
+ladder, and the checkpoint/facade satellites.
+"""
+import numpy as np
+import pytest
+
+from conftest import make_clustered
+from repro.index import IndexConfig, build_index
+from repro.resilience import (
+    ChaosError,
+    ChaosLatencyExceeded,
+    CircuitBreaker,
+    CorruptSegmentError,
+    FaultPlan,
+    FaultSpec,
+    RecoveryError,
+    WriteAheadLog,
+    chaos,
+    latest_snapshot,
+    recover,
+    scan_wal,
+)
+from repro.resilience.fsio import commit_dir
+
+D = 12
+K = 8
+SEED_N = 80
+
+STREAM_OPTS = {"delta_threshold": 10_000, "max_segments": 10,
+               "max_dead_fraction": 1.0}  # explicit flushes, no compaction
+
+
+def plain_cfg(**opts):
+    return IndexConfig(backend="streaming", seed=0,
+                       options={**STREAM_OPTS, **opts})
+
+
+def durable_cfg(directory, **dur):
+    return plain_cfg(durability={"dir": str(directory), **dur})
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_clustered(400, D, n_clusters=8, seed=0)
+
+
+@pytest.fixture(scope="module")
+def queries(data):
+    return data[300:316] + 1e-3
+
+
+# the op script for the kill-point sweep: every op issues exactly one
+# "wal.append" and one "stream.apply" access (seed insert = access 0)
+def make_ops(data):
+    return [
+        ("insert", data[SEED_N: SEED_N + 30]),
+        ("delete", [5, 17, 33]),
+        ("flush",),
+        ("insert", data[SEED_N + 30: SEED_N + 55]),
+        ("delete", [60, 81, 99, 2]),
+        ("flush",),
+    ]
+
+
+def apply_op(index, op):
+    if op[0] == "insert":
+        index.insert(op[1])
+    elif op[0] == "delete":
+        index.delete(np.asarray(op[1], dtype=np.int64))
+    else:
+        index.flush()
+
+
+def build_twin(data, ops):
+    twin = build_index(data[:SEED_N], plain_cfg())
+    for op in ops:
+        apply_op(twin, op)
+    return twin
+
+
+def assert_equiv(recovered, twin, queries):
+    assert np.array_equal(np.sort(recovered.live_ids()),
+                          np.sort(twin.live_ids()))
+    if recovered.n == 0:
+        return
+    ra = recovered.search(queries, k=K)
+    rb = twin.search(queries, k=K)
+    np.testing.assert_array_equal(ra.indices, rb.indices)
+    np.testing.assert_allclose(ra.distances, rb.distances, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# WAL
+# ---------------------------------------------------------------------------
+
+
+class TestWal:
+    def test_roundtrip_reopen_continues_lsn(self, tmp_path):
+        p = tmp_path / "wal.log"
+        w = WriteAheadLog(p, base_lsn=5)
+        lsns = [w.append({"op": "x", "i": i}) for i in range(4)]
+        w.close()
+        assert lsns == [5, 6, 7, 8]
+        base, recs, _ = scan_wal(p)
+        assert base == 5
+        assert [r.payload["i"] for r in recs] == [0, 1, 2, 3]
+        w2 = WriteAheadLog(p)
+        assert w2.append({"op": "x", "i": 4}) == 9
+        w2.close()
+        assert len(scan_wal(p)[1]) == 5
+
+    def test_torn_tail_truncated_on_reopen(self, tmp_path):
+        p = tmp_path / "wal.log"
+        with WriteAheadLog(p) as w:
+            for i in range(3):
+                w.append({"op": "x", "i": i})
+        with open(p, "ab") as f:  # torn record: header bytes, no body
+            f.write(b"\xff" * 7)
+        _, recs, valid = scan_wal(p)
+        assert len(recs) == 3 and valid == p.stat().st_size - 7
+        w = WriteAheadLog(p)  # reopen physically drops the tail
+        assert p.stat().st_size == valid
+        w.append({"op": "x", "i": 3})
+        w.close()
+        assert len(scan_wal(p)[1]) == 4
+
+    def test_mid_log_corruption_stops_scan(self, tmp_path):
+        p = tmp_path / "wal.log"
+        with WriteAheadLog(p) as w:
+            w.append({"op": "x", "i": 0})
+        _, _, first_end = scan_wal(p)
+        with WriteAheadLog(p) as w:
+            for i in range(1, 4):
+                w.append({"op": "x", "i": i})
+        blob = bytearray(p.read_bytes())
+        blob[first_end + 4] ^= 0x40  # inside record 2
+        p.write_bytes(bytes(blob))
+        _, recs, valid = scan_wal(p)
+        assert len(recs) == 1 and valid == first_end  # durable prefix only
+
+    def test_bad_header_rejected(self, tmp_path):
+        p = tmp_path / "wal.log"
+        p.write_bytes(b"NOTAWAL0" + b"\x00" * 8)
+        with pytest.raises(ValueError):
+            scan_wal(p)
+
+
+# ---------------------------------------------------------------------------
+# chaos harness
+# ---------------------------------------------------------------------------
+
+
+class TestChaos:
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError):
+            FaultSpec("wal.append", "explode")
+
+    def test_at_fires_exactly_once(self):
+        plan = FaultPlan([FaultSpec("s", "error", at=2)])
+        for i in range(5):
+            if i == 2:
+                with pytest.raises(ChaosError):
+                    plan.on_hit("s")
+            else:
+                plan.on_hit("s")
+        assert plan.fired() == {("s", "error"): 1}
+
+    def test_probabilistic_firing_is_deterministic(self):
+        def run(seed):
+            plan = FaultPlan([FaultSpec("s", "drop", prob=0.3, times=0)],
+                             seed=seed)
+            return [plan.on_dropped("s") for _ in range(50)]
+
+        assert run(7) == run(7)
+        assert run(7) != run(8)
+        assert any(run(7)) and not all(run(7))
+
+    def test_times_caps_firing(self):
+        plan = FaultPlan([FaultSpec("s", "drop", prob=1.0, times=2)])
+        assert sum(plan.on_dropped("s") for _ in range(10)) == 2
+
+    def test_bitflip_changes_bytes_preserves_length(self):
+        plan = FaultPlan([FaultSpec("s", "bitflip", at=0, flip_bits=3)],
+                         seed=3)
+        data = bytes(range(64))
+        out = plan.on_bytes("s", data)
+        assert out != data and len(out) == len(data)
+        assert plan.on_bytes("s", data) == data  # fired once only
+
+    def test_latency_respects_budget(self):
+        slept = []
+        plan = FaultPlan([FaultSpec("s", "latency", at=0, latency_s=1.0,
+                                    times=0),
+                          FaultSpec("s", "latency", at=1, latency_s=0.05)])
+        plan.sleep = slept.append
+        with pytest.raises(ChaosLatencyExceeded):
+            plan.on_hit("s", budget_s=0.1)  # abandoned at the deadline
+        plan.on_hit("s", budget_s=0.1)  # under budget: just slow
+        assert slept == [0.1, 0.05]
+
+    def test_active_restores_previous_plan(self):
+        outer = FaultPlan([])
+        inner = FaultPlan([])
+        assert chaos.current_plan() is None
+        with chaos.active(outer):
+            with chaos.active(inner):
+                assert chaos.current_plan() is inner
+            assert chaos.current_plan() is outer
+        assert chaos.current_plan() is None
+
+    def test_hooks_are_noops_without_plan(self):
+        chaos.hit("anything")
+        assert chaos.transform("anything", b"abc") == b"abc"
+        assert not chaos.dropped("anything")
+        assert not chaos.poisoned("anything")
+
+    def test_seeded_covers_site_kinds(self):
+        plan = FaultPlan.seeded(0, sites=["serve.search"])
+        assert {(s.site, s.kind) for s in plan.specs} == {
+            ("serve.search", "error"), ("serve.search", "latency")}
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker
+# ---------------------------------------------------------------------------
+
+
+class TestBreaker:
+    def make(self, **kw):
+        self.t = [0.0]
+        events = []
+        br = CircuitBreaker(window=4, failure_threshold=0.5, min_calls=4,
+                            reset_timeout_s=10.0, clock=lambda: self.t[0],
+                            on_transition=lambda o, n: events.append((o, n)),
+                            **kw)
+        return br, events
+
+    def test_stays_closed_below_min_calls(self):
+        br, _ = self.make()
+        for _ in range(3):
+            br.record_failure()
+        assert br.state == "closed" and br.allow()
+
+    def test_trips_open_and_blocks(self):
+        br, events = self.make()
+        for _ in range(4):
+            br.record_failure()
+        assert br.state == "open" and not br.allow()
+        assert br.state_code() == 1.0
+        assert events == [("closed", "open")]
+
+    def test_half_open_single_probe_then_close(self):
+        br, events = self.make()
+        for _ in range(4):
+            br.record_failure()
+        self.t[0] = 11.0
+        assert br.allow()  # OPEN → HALF_OPEN, probe admitted
+        assert br.state == "half_open" and br.state_code() == 2.0
+        assert not br.allow()  # one probe at a time
+        br.record_success()
+        assert br.state == "closed" and br.failure_rate() == 0.0
+        assert events[-1] == ("half_open", "closed")
+
+    def test_half_open_failure_reopens_with_fresh_timer(self):
+        br, _ = self.make()
+        for _ in range(4):
+            br.record_failure()
+        self.t[0] = 11.0
+        assert br.allow()
+        br.record_failure()
+        assert br.state == "open" and not br.allow()
+        self.t[0] = 20.9  # timer restarted at t=11, not t=0
+        assert not br.allow()
+        self.t[0] = 21.1
+        assert br.allow()
+        assert br.transitions == 4
+
+
+# ---------------------------------------------------------------------------
+# kill-point sweep: crash at every WAL/memory boundary, recover, compare
+# ---------------------------------------------------------------------------
+
+
+class TestKillPointSweep:
+    def run_killed(self, directory, data, ops, spec):
+        """Run the script under one scheduled kill; returns the index
+        of the op the crash landed on (None = script completed)."""
+        crashed_at = None
+        idx = None
+        with chaos.active(FaultPlan([spec])):
+            try:
+                idx = build_index(data[:SEED_N], durable_cfg(directory))
+                for i, op in enumerate(ops):
+                    apply_op(idx, op)
+            except ChaosError:
+                crashed_at = -1 if idx is None else i
+        if idx is not None:
+            idx.durability.close()  # drop the fd; state is "crashed"
+        return crashed_at
+
+    def test_kill_before_wal_write_excludes_op(self, tmp_path, data,
+                                               queries):
+        """A crash BEFORE the WAL write (access j) loses exactly that
+        op: the durable prefix is everything before it."""
+        ops = make_ops(data)
+        for j in range(len(ops) + 1):
+            d = tmp_path / f"wal_{j}"
+            spec = FaultSpec("wal.append", "error", at=j)
+            crashed = self.run_killed(d, data, ops, spec)
+            assert crashed == (-1 if j == 0 else j - 1)
+            recovered, report = recover(d)
+            # access 0 is the seed insert; op i is access i+1
+            expected = ([] if j == 0 else ops[: j - 1])
+            twin = (build_index(data[:0], plain_cfg()) if j == 0
+                    else build_twin(data, expected))
+            assert_equiv(recovered, twin, queries)
+            assert report.records_replayed == j
+            recovered.close()
+
+    def test_kill_after_wal_write_includes_op(self, tmp_path, data,
+                                              queries):
+        """A crash AFTER the WAL write but BEFORE the memory mutation
+        keeps the op: the log dominates memory."""
+        ops = make_ops(data)
+        for j in range(len(ops) + 1):
+            d = tmp_path / f"apply_{j}"
+            spec = FaultSpec("stream.apply", "error", at=j)
+            self.run_killed(d, data, ops, spec)
+            recovered, report = recover(d)
+            twin = build_twin(data, ops[:j])
+            assert_equiv(recovered, twin, queries)
+            assert report.records_replayed == j + 1
+            recovered.close()
+
+    @pytest.mark.parametrize("site", ["snapshot.write", "snapshot.commit"])
+    def test_kill_during_snapshot_falls_back_to_wal(self, tmp_path, data,
+                                                    queries, site):
+        d = tmp_path / site
+        ops = make_ops(data)
+        with chaos.active(FaultPlan([FaultSpec(site, "error", at=0)])):
+            idx = build_index(data[:SEED_N], durable_cfg(d))
+            for op in ops[:3]:
+                apply_op(idx, op)
+            with pytest.raises(ChaosError):
+                idx.snapshot()
+        idx.durability.close()
+        assert latest_snapshot(d) is None  # nothing committed
+        recovered, report = recover(d)
+        assert report.snapshot_lsn is None
+        assert report.records_replayed == 4  # seed + 3 ops, full replay
+        assert_equiv(recovered, build_twin(data, ops[:3]), queries)
+        recovered.close()
+
+    def test_crash_after_snapshot_replays_only_tail(self, tmp_path, data,
+                                                    queries):
+        d = tmp_path / "snap_tail"
+        ops = make_ops(data)
+        with chaos.active(FaultPlan([FaultSpec("stream.apply", "error",
+                                               at=5)])):
+            idx = build_index(data[:SEED_N], durable_cfg(d))
+            for op in ops[:3]:
+                apply_op(idx, op)
+            idx.snapshot()  # durable through ops[2]; WAL rotated
+            apply_op(idx, ops[3])
+            with pytest.raises(ChaosError):
+                apply_op(idx, ops[4])  # logged, crash before memory
+        idx.durability.close()
+        recovered, report = recover(d)
+        assert report.snapshot_lsn is not None
+        assert report.records_replayed == 2  # ops[3], ops[4] only
+        assert_equiv(recovered, build_twin(data, ops[:5]), queries)
+        recovered.close()
+
+
+# ---------------------------------------------------------------------------
+# recovery: torn tails, corruption refusal, guards, lifecycle
+# ---------------------------------------------------------------------------
+
+
+class TestRecovery:
+    def finish(self, directory, data, ops, **dur):
+        idx = build_index(data[:SEED_N], durable_cfg(directory, **dur))
+        for op in ops:
+            apply_op(idx, op)
+        return idx
+
+    def test_clean_roundtrip_with_compaction(self, tmp_path, data, queries):
+        """No crash, no snapshot: full WAL replay reproduces flushes AND
+        compactions (derived records replay as no-ops)."""
+        d = tmp_path / "clean"
+        cfg = IndexConfig(backend="streaming", seed=0, options={
+            "delta_threshold": 40, "max_segments": 2,
+            "max_dead_fraction": 0.3,
+            "durability": {"dir": str(d)}})
+        idx = build_index(data[:SEED_N], cfg)
+        rng = np.random.default_rng(3)
+        pos = SEED_N
+        for _ in range(4):
+            idx.insert(data[pos: pos + 50])
+            pos += 50
+            idx.delete(rng.choice(idx.live_ids(), 12, replace=False))
+        assert idx.n_compactions >= 1, "script must force compaction"
+        idx.close()
+        recovered, report = recover(d)
+        assert np.array_equal(np.sort(recovered.live_ids()),
+                              np.sort(idx.live_ids()))
+        assert recovered.n_flushes == idx.n_flushes
+        assert recovered.n_compactions == idx.n_compactions
+        ra, rb = recovered.search(queries, k=K), idx.search(queries, k=K)
+        np.testing.assert_array_equal(ra.indices, rb.indices)
+        assert report.records_replayed > 0
+        recovered.close()
+
+    def test_torn_tail_is_truncated_not_replayed(self, tmp_path, data,
+                                                 queries):
+        d = tmp_path / "torn"
+        ops = make_ops(data)
+        self.finish(d, data, ops).close()
+        wal = d / "wal.log"
+        size = wal.stat().st_size
+        with open(wal, "ab") as f:  # crash mid-append of a later record
+            f.write(b"\x13\x00\x00\x00garbage")
+        recovered, report = recover(d)
+        assert report.torn_bytes_truncated == wal.stat().st_size - size + 11
+        assert wal.stat().st_size >= size  # truncated, then reopened
+        assert_equiv(recovered, build_twin(data, ops), queries)
+        recovered.close()
+        # the torn tail is gone for good: a second recovery sees none
+        recovered2, report2 = recover(d)
+        assert report2.torn_bytes_truncated == 0
+        recovered2.close()
+
+    def test_chopped_final_record_drops_that_op(self, tmp_path, data,
+                                                queries):
+        d = tmp_path / "chopped"
+        ops = make_ops(data)
+        self.finish(d, data, ops).close()
+        wal = d / "wal.log"
+        wal.write_bytes(wal.read_bytes()[:-3])  # disk lost the tail
+        recovered, _ = recover(d)  # final op was ops[-1] ("flush")
+        assert_equiv(recovered, build_twin(data, ops[:-1]), queries)
+        recovered.close()
+
+    def test_corrupt_snapshot_segment_refused(self, tmp_path, data):
+        d = tmp_path / "corrupt"
+        idx = self.finish(d, data, make_ops(data))
+        idx.snapshot()
+        idx.close()
+        snap = latest_snapshot(d)
+        seg = sorted(snap.glob("seg_*.npz"))[0]
+        blob = bytearray(seg.read_bytes())
+        blob[len(blob) // 2] ^= 0x10
+        seg.write_bytes(bytes(blob))
+        with pytest.raises(CorruptSegmentError):
+            recover(d)
+
+    def test_bitflip_at_segment_load_caught_by_checksum(self, tmp_path,
+                                                        data):
+        d = tmp_path / "bitflip"
+        idx = self.finish(d, data, make_ops(data))
+        idx.snapshot()
+        idx.close()
+        plan = FaultPlan([FaultSpec("segment.load", "bitflip", at=0,
+                                    flip_bits=3)], seed=5)
+        with chaos.active(plan):
+            with pytest.raises(CorruptSegmentError):
+                recover(d)
+        assert plan.fired() == {("segment.load", "bitflip"): 1}
+        recovered, _ = recover(d)  # the disk itself is fine
+        assert recovered.n > 0
+        recovered.close()
+
+    def test_fresh_build_refuses_existing_dir(self, tmp_path, data):
+        d = tmp_path / "occupied"
+        self.finish(d, data, []).close()
+        with pytest.raises(RecoveryError):
+            build_index(data[:SEED_N], durable_cfg(d))
+
+    def test_snapshot_gc_keeps_newest(self, tmp_path, data):
+        d = tmp_path / "gc"
+        idx = self.finish(d, data, [], snapshot_keep=1)
+        for chunk in range(3):
+            idx.insert(data[SEED_N + chunk * 10: SEED_N + chunk * 10 + 10])
+            idx.snapshot()
+        idx.close()
+        snaps = [p for p in d.iterdir() if p.name.startswith("snap_")]
+        assert len(snaps) == 1 and latest_snapshot(d) == snaps[0]
+
+    def test_snapshot_every_triggers_automatically(self, tmp_path, data,
+                                                   queries):
+        d = tmp_path / "auto"
+        idx = self.finish(d, data, make_ops(data), snapshot_every=3)
+        idx.close()
+        assert latest_snapshot(d) is not None
+        recovered, report = recover(d)
+        assert report.snapshot_lsn is not None
+        assert_equiv(recovered, build_twin(data, make_ops(data)), queries)
+        recovered.close()
+
+    def test_recovered_index_keeps_logging(self, tmp_path, data, queries):
+        """recover() hands back a LIVE durable index: post-recovery ops
+        survive a second crash/recover cycle."""
+        d = tmp_path / "relog"
+        ops = make_ops(data)
+        self.finish(d, data, ops[:3]).close()
+        mid, _ = recover(d)
+        for op in ops[3:]:
+            apply_op(mid, op)
+        mid.close()
+        final, _ = recover(d)
+        assert_equiv(final, build_twin(data, ops), queries)
+        final.close()
+
+
+# ---------------------------------------------------------------------------
+# serve hardening: validation, retry, hedge, quarantine, breaker wiring
+# ---------------------------------------------------------------------------
+
+
+def make_step(n=256, d=16, k=8, **options):
+    from repro.serve.serve_step import make_retrieval_step
+
+    keys = make_clustered(n, d, seed=3)
+    cfg = IndexConfig(backend="flat", seed=0, options=options)
+    step, _ = make_retrieval_step(keys, np.arange(n), k=k, index_config=cfg)
+    return step, keys
+
+
+class TestServeHardening:
+    def make_sched(self, degraded=False, **cfg):
+        from repro.serve import RequestScheduler, ServeConfig
+        from repro.serve.serve_step import make_retrieval_step
+
+        step, keys = make_step()
+        dstep = None
+        if degraded:
+            dstep, _ = make_retrieval_step(
+                make_clustered(256, 16, seed=3), np.arange(256), k=8,
+                index_config=IndexConfig(backend="flat", seed=0,
+                                         options={"quant": "sq8",
+                                                  "rerank": 16}))
+        cfg.setdefault("default_deadline_ms", 1e6)
+        sched = RequestScheduler(step, degraded_step=dstep,
+                                 config=ServeConfig(b_max=4, cache=False,
+                                                    **cfg))
+        sched._sleep = lambda s: None  # no real backoff in tests
+        return sched, keys
+
+    def test_nonfinite_query_rejected_at_submit(self):
+        from repro.serve import RejectedQuery
+
+        sched, keys = self.make_sched()
+        q = keys[0].copy()
+        q[3] = np.nan
+        with pytest.raises(RejectedQuery) as ei:
+            sched.submit(q, k=4)
+        assert ei.value.reason == "nonfinite"
+        snap = sched.snapshot()
+        assert snap.rejected == 1 and snap.submitted == 0
+
+    def test_batch_submit_isolates_rejects(self):
+        sched, keys = self.make_sched()
+        Q = keys[:3].copy()
+        Q[1, 0] = np.inf
+        tickets = sched.submit_batch(Q, k=4)
+        sched.drain()
+        statuses = [t.result().status for t in tickets]
+        assert statuses == ["ok", "rejected", "ok"]
+        snap = sched.snapshot()
+        assert snap.rejected == 1 and snap.completed == 2
+        assert snap.submitted == snap.completed  # rejects never enter
+
+    def test_transient_error_retried_once(self):
+        sched, keys = self.make_sched()
+        plan = FaultPlan([FaultSpec("serve.search", "error", at=0)])
+        with chaos.active(plan):
+            tickets = [sched.submit(keys[i], k=4) for i in range(4)]
+        assert all(t.result().ok for t in tickets)
+        snap = sched.snapshot()
+        assert snap.retries == 1 and snap.hedges == 0 and snap.failed == 0
+
+    def test_persistent_error_hedges_to_degraded_tier(self):
+        sched, keys = self.make_sched(degraded=True)
+        plan = FaultPlan([FaultSpec("serve.search", "error", prob=1.0,
+                                    times=0)])
+        with chaos.active(plan):
+            tickets = [sched.submit(keys[i], k=4) for i in range(4)]
+        resps = [t.result() for t in tickets]
+        assert all(r.ok and r.degraded for r in resps)
+        snap = sched.snapshot()
+        assert snap.retries == 1 and snap.hedges == 1
+        assert sched.breaker.state == "closed"  # hedge target healthy
+
+    def test_exhausted_ladder_quarantines_and_fails_solo(self):
+        sched, keys = self.make_sched()  # no degraded tier to hedge to
+        plan = FaultPlan([FaultSpec("serve.search", "error", prob=1.0,
+                                    times=0)])
+        with chaos.active(plan):
+            tickets = [sched.submit(keys[i], k=4) for i in range(4)]
+        resps = [t.result() for t in tickets]
+        assert [r.status for r in resps] == ["failed"] * 4
+        snap = sched.snapshot()
+        assert snap.failed == 4 and snap.pending == 0
+        assert snap.quarantine_flushes >= 2  # bisection ran
+        assert snap.submitted == snap.completed + snap.shed + snap.failed
+
+    def test_open_breaker_blocks_hedge(self):
+        sched, keys = self.make_sched(degraded=True)
+        for _ in range(4):
+            sched.breaker.record_failure()
+        assert sched.breaker.state == "open"
+        plan = FaultPlan([FaultSpec("serve.search", "error", prob=1.0,
+                                    times=0)])
+        with chaos.active(plan):
+            tickets = [sched.submit(keys[i], k=4) for i in range(4)]
+        assert all(t.result().status == "failed" for t in tickets)
+        assert sched.snapshot().hedges == 0
+
+    def test_latency_spike_past_deadline_triggers_ladder(self):
+        sched, keys = self.make_sched(degraded=True,
+                                      default_deadline_ms=50.0)
+        plan = FaultPlan([FaultSpec("serve.search", "latency", prob=1.0,
+                                    times=0, latency_s=30.0)])
+        plan.sleep = lambda s: None  # model the stall, skip the wait
+        with chaos.active(plan):
+            tickets = [sched.submit(keys[i], k=4) for i in range(4)]
+        resps = [t.result() for t in tickets]
+        assert all(r.ok and r.degraded for r in resps)
+        assert sched.snapshot().hedges == 1
+
+    def test_dropped_flush_leaves_requests_queued(self):
+        sched, keys = self.make_sched()
+        plan = FaultPlan([FaultSpec("serve.flush", "drop", at=0)])
+        with chaos.active(plan):
+            tickets = [sched.submit(keys[i], k=4) for i in range(4)]
+            assert not any(t.done for t in tickets)  # flush swallowed
+            sched.drain()  # forced flushes are exempt from drops
+        assert all(t.result().ok for t in tickets)
+
+    def test_overfull_bucket_after_drop_flushes_in_chunks(self):
+        """A dropped flush leaves > b_max requests queued; the next
+        flush must serve them in palette-sized chunks, not overflow
+        the staging buffer."""
+        sched, keys = self.make_sched()
+        plan = FaultPlan([FaultSpec("serve.flush", "drop", at=0)])
+        with chaos.active(plan):
+            tickets = [sched.submit(keys[i], k=4) for i in range(4)]
+            assert not any(t.done for t in tickets)
+            tickets += [sched.submit(keys[4 + i], k=4) for i in range(5)]
+        sched.drain()
+        assert all(t.result().ok for t in tickets)
+        assert sched.snapshot().completed == 9
+
+    def test_resilience_metrics_exported(self):
+        from repro.obs.metrics import get_registry
+        from repro.resilience.recovery import _metrics
+
+        _metrics()  # WAL/recovery metrics register on first durable use
+        sched, keys = self.make_sched(degraded=True)
+        [sched.submit(keys[i], k=4) for i in range(4)]
+        text = get_registry().to_prometheus()
+        for name in ("serve_retries_total", "serve_hedges_total",
+                     "serve_breaker_state", "wal_fsync_seconds",
+                     "recovery_replayed_total"):
+            assert name in text, f"{name} missing from exposition"
+
+
+# ---------------------------------------------------------------------------
+# satellites: durable checkpoints, facade non-finite masking
+# ---------------------------------------------------------------------------
+
+
+class TestCommitDir:
+    def test_commit_protocol(self, tmp_path):
+        tmp = tmp_path / "work.tmp"
+        tmp.mkdir()
+        (tmp / "payload.bin").write_bytes(b"\x01" * 128)
+        final = commit_dir(tmp, tmp_path / "work")
+        assert final == tmp_path / "work"
+        assert not tmp.exists()
+        assert (final / "COMMIT").exists()
+        assert (final / "payload.bin").read_bytes() == b"\x01" * 128
+
+
+class TestCheckpointDurability:
+    def test_truncated_payload_with_commit_is_surfaced(self, tmp_path):
+        """Regression: pre-fsync checkpoints could persist COMMIT while
+        the shard payload was torn — restore must fail loudly, not
+        hand back garbage."""
+        jnp = pytest.importorskip("jax.numpy")
+        from repro.launch import checkpoint as ckpt
+
+        tree = {"w": jnp.arange(64.0)}
+        p = ckpt.save(tmp_path, 1, tree)
+        shard = p / "shard_0.npz"
+        shard.write_bytes(shard.read_bytes()[: shard.stat().st_size // 2])
+        assert (p / "COMMIT").exists()  # the torn-but-committed state
+        with pytest.raises(RuntimeError, match="unreadable"):
+            ckpt.restore(tmp_path, 1, tree)
+
+    def test_save_still_commits_atomically(self, tmp_path):
+        jnp = pytest.importorskip("jax.numpy")
+        from repro.launch import checkpoint as ckpt
+
+        tree = {"w": jnp.ones((3, 3))}
+        p = ckpt.save(tmp_path, 2, tree)
+        assert (p / "COMMIT").exists()
+        assert ckpt.latest_step(tmp_path) == 2
+        got, _ = ckpt.restore(tmp_path, 2, tree)
+        np.testing.assert_array_equal(np.asarray(got["w"]), 1.0)
+
+
+class TestNonfiniteFacade:
+    def test_nonfinite_rows_masked_to_sentinel(self, data):
+        idx = build_index(np.asarray(data[:200]), backend="flat", seed=0)
+        Q = np.asarray(data[200:205]).copy()
+        Q[1, 3] = np.nan
+        Q[4, 0] = np.inf
+        res = idx.search(Q, k=5)
+        assert (res.indices[[1, 4]] == -1).all()
+        assert np.isinf(res.distances[[1, 4]]).all()
+        assert res.stats.queries_rejected == 2
+        clean = idx.search(np.where(np.isfinite(Q), Q, 0.0), k=5)
+        for row in (0, 2, 3):  # clean rows unaffected by masking
+            np.testing.assert_array_equal(res.indices[row],
+                                          clean.indices[row])
+
+    def test_queries_rejected_sums_and_survives_roundtrip(self):
+        from repro.index import WorkStats
+
+        a = WorkStats(queries_rejected=2)
+        b = WorkStats(queries_rejected=3)
+        total = a + b
+        assert total.queries_rejected == 5
+        assert WorkStats.from_dict(total.as_dict()).queries_rejected == 5
+        assert WorkStats.from_dict({"bogus": 1}).queries_rejected == 0
