@@ -39,6 +39,7 @@ MODULES = [
     ("quant_tradeoff", "benchmarks.quant_tradeoff"),
     ("serve_load", "benchmarks.serve_load"),
     ("resilience", "benchmarks.resilience_cost"),
+    ("sharded_scale", "benchmarks.sharded_scale"),
 ]
 
 

@@ -27,7 +27,13 @@ over a ragged mixed-k trace against a streaming datastore: every ok
 response must match a direct facade search, shed accounting must sum
 to the submitted count, compile counters must match the executed shape
 set, and the SQ8 hot-query cache must invalidate across extend/evict.
-Exits non-zero on the first violation.
+
+A sharded conformance gate (DESIGN.md §15) holds the sharded-flat
+backend to BIT-IDENTICAL ANN and CP answers vs flat at shard counts
+{1,2,4,8} (mesh path when enough devices are visible, the emulated
+twin otherwise), a recall floor for sharded-flat-pq vs flat-pq, and
+shard-summed WorkStats equal to flat's totals.  Exits non-zero on the
+first violation.
 
     PYTHONPATH=src python scripts/check_api.py
 """
@@ -329,6 +335,84 @@ def check_cp(data, rng) -> None:
           "sorted exact-verified pairs, monotone pair accounting]")
 
 
+def check_sharded(data, queries, rng) -> None:
+    """Sharded conformance gate (DESIGN.md §15): the sharded-flat
+    backend must be BIT-IDENTICAL to flat (ANN and CP) at every shard
+    count — the counts-only threshold exchange plus the canonical
+    ``answer_distances`` recomputation make exactness, not recall, the
+    contract — sharded-flat-pq must hold a recall floor vs flat-pq, and
+    the per-shard WorkStats must sum to flat's totals with a sane skew
+    field.  Shard counts above the visible device count run on the
+    emulated twin (bit-identical to the mesh path by construction)."""
+    from repro.index import IndexConfig, build_index
+
+    n, k = len(data), 5
+    B = queries.shape[0]
+    flat = build_index(data, IndexConfig(backend="flat", seed=0,
+                                         options={"force": "ref"}))
+    rf = flat.search(queries, k)
+    cf = flat.cp_search(4)
+    shard_counts = sorted({1, 2, 4, 8})
+    for P in shard_counts:
+        idx = build_index(data, IndexConfig(
+            backend="sharded-flat", seed=0,
+            options={"shards": P, "force": "ref"}))
+        rs = idx.search(queries, k)
+        np.testing.assert_array_equal(
+            rf.indices, rs.indices,
+            err_msg=f"sharded-flat P={P}: ANN ids diverge from flat")
+        np.testing.assert_array_equal(
+            rf.distances, rs.distances,
+            err_msg=f"sharded-flat P={P}: ANN distances not bit-identical")
+        cs = idx.cp_search(4)
+        np.testing.assert_array_equal(
+            cf.pairs, cs.pairs,
+            err_msg=f"sharded-flat P={P}: CP pairs diverge from flat")
+        np.testing.assert_array_equal(
+            cf.distances, cs.distances,
+            err_msg=f"sharded-flat P={P}: CP distances not bit-identical")
+        # per-shard accounting: totals match flat, skew bounded by total
+        assert rs.stats.shards == P, rs.stats.shards
+        assert rs.stats.candidates_selected == rf.stats.candidates_selected, (
+            f"P={P}: shard-summed candidate count "
+            f"{rs.stats.candidates_selected} != flat "
+            f"{rf.stats.candidates_selected}")
+        assert 0 < rs.stats.max_shard_candidates <= (
+            rs.stats.candidates_selected), "skew field out of bounds"
+        assert cs.stats.max_shard_pairs <= cs.stats.pairs_verified
+        _assert_result_invariants(rs, n, B, k)
+
+    # quantized sharded path: per-shard codebooks, shard-local ADC
+    # rerank — approximate by design, so a recall floor vs flat-pq
+    exact = np.argsort(
+        np.linalg.norm(data[None] - queries[:, None], axis=-1), axis=1
+    )[:, :k]
+    fpq = build_index(data, IndexConfig(backend="flat-pq", seed=0,
+                                        options={"force": "ref"}))
+    ref = _recall(fpq.search(queries, k), exact)
+    spq = build_index(data, IndexConfig(
+        backend="sharded-flat-pq", seed=0,
+        options={"shards": max(shard_counts), "force": "ref"}))
+    rq = spq.search(queries, k)
+    rec = _recall(rq, exact)
+    assert rec >= 0.95 * ref, (
+        f"sharded-flat-pq recall {rec:.3f} < 0.95× flat-pq {ref:.3f}")
+    assert spq.bytes_per_point() < flat.bytes_per_point(), (
+        "sharded-flat-pq: no storage reduction")
+    _assert_result_invariants(rq, n, B, k)
+    mode = ("mesh" if len(jax_devices()) >= max(shard_counts)
+            else "emulated>" + str(len(jax_devices())))
+    print(f"  ok   sharded gate  [P={shard_counts} bit-identical ANN+CP, "
+          f"pq recall {rec:.3f} vs flat-pq {ref:.3f}, stats sum+skew; "
+          f"{mode}]")
+
+
+def jax_devices():
+    import jax
+
+    return jax.devices()
+
+
 def main() -> int:
     from repro.index import (
         CpSearchResult,
@@ -412,11 +496,18 @@ def main() -> int:
         failures.append("quality-gate")
         print(f"  FAIL quality gate  {type(e).__name__}: {e}")
 
+    try:
+        check_sharded(data, queries, rng)
+    except Exception as e:  # noqa: BLE001
+        failures.append("sharded-gate")
+        print(f"  FAIL sharded gate  {type(e).__name__}: {e}")
+
     if failures:
         print(f"check_api: FAILED for {failures}")
         return 1
     print(f"check_api: all {len(available_backends())} backends conform "
-          "+ quant gate + cp gate + serve gate + quality gate")
+          "+ quant gate + cp gate + serve gate + quality gate "
+          "+ sharded gate")
     return 0
 
 

@@ -52,3 +52,33 @@ def make_mesh(shape, axis_names):
         except TypeError:
             pass
     return jax.make_mesh(shape, axis_names)
+
+
+def make_submesh(shape, axis_names, devices=None):
+    """A mesh over the FIRST prod(shape) devices.
+
+    ``jax.make_mesh`` (and its older spellings) insists on consuming
+    every visible device, which makes "run the P=2 layout on the
+    8-device CI host" impossible through it — the shim gap the sharded
+    parity suite surfaced.  Build the Mesh directly over a device
+    prefix instead; falls back to :func:`make_mesh` when the shapes
+    happen to cover everything (keeping Auto axis types where they
+    exist).
+    """
+    import math
+
+    import numpy as np
+
+    devices = list(jax.devices()) if devices is None else list(devices)
+    need = math.prod(shape)
+    if need > len(devices):
+        raise ValueError(
+            f"mesh shape {tuple(shape)} needs {need} devices, "
+            f"only {len(devices)} visible")
+    if need == len(devices):
+        try:
+            return make_mesh(tuple(shape), tuple(axis_names))
+        except Exception:
+            pass
+    grid = np.array(devices[:need]).reshape(tuple(shape))
+    return jax.sharding.Mesh(grid, tuple(axis_names))

@@ -81,6 +81,29 @@ def candidate_budget(params: PMLSHParams, n: int, k: int) -> int:
     return int(min(max(int(np.ceil(params.beta * n)) + k, k), n))
 
 
+@jax.jit
+def answer_distances(data: jax.Array, ids: jax.Array,
+                     q: jax.Array) -> jax.Array:
+    """Canonical answer distances: ||q_b − data[ids[b, j]]||, +inf where
+    id < 0.
+
+    Backends that promise bit-identical answers to each other (flat and
+    the sharded-flat family, DESIGN.md §15) route their final distances
+    through this ONE function after id selection.  The verify d² that
+    RANKS candidates is computed inside each pipeline's own jit program,
+    and XLA is free to reassociate a fused reduce differently per
+    program — 1-ulp drift that would break cross-backend distance
+    equality even when the ids agree.  Recomputing the k answers here,
+    in a single standalone-compiled program both backends share, pins
+    the returned floats to one reduction order at O(B·k·d) cost — noise
+    next to the O(B·T·d) verify.
+    """
+    rows = data[jnp.maximum(ids, 0)]  # (B, k, d)
+    d2 = jnp.sum((rows - q[:, None, :]) ** 2, axis=-1)
+    d2 = jnp.where(ids < 0, jnp.inf, d2)
+    return jnp.sqrt(jnp.maximum(d2, 0.0)).astype(jnp.float32)
+
+
 @partial(jax.jit, static_argnames=("k", "T", "use_kernels", "fused", "force",
                                    "with_count"))
 def ann_query(

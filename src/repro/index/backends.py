@@ -40,7 +40,12 @@ from repro.core.baselines import (
 )
 from repro.core.cp import PMLSH_CP
 from repro.core.estimator import solve_parameters
-from repro.core.flat_index import ann_query, build_flat_index, candidate_budget
+from repro.core.flat_index import (
+    ann_query,
+    answer_distances,
+    build_flat_index,
+    candidate_budget,
+)
 from repro.obs import trace as otrace
 
 from .config import IndexConfig
@@ -323,8 +328,12 @@ class FlatBackend(BaseIndex):
                                          use_kernels=self.use_kernels,
                                          fused=fused, force=force,
                                          with_count=True)
+            # canonical answer floats (shared with sharded-flat) — the
+            # in-pipeline d² only ranked the candidates
+            ids = np.asarray(ids)
+            dd = np.asarray(answer_distances(self.impl.data, ids, q))
             return SearchResult(
-                np.asarray(ids), np.asarray(dd),
+                ids, dd,
                 stats=WorkStats(rounds=B, candidates_verified=B * T,
                                 candidates_selected=self._record_select(
                                     cnt, T)),
@@ -464,6 +473,120 @@ class ShardedBackend(BaseIndex):
         return CpSearchResult(
             pairs, dd, stats=WorkStats(candidates_verified=verified,
                                        pairs_verified=verified))
+
+
+@register_backend("sharded-flat", capabilities=("ann", "cp"))
+class ShardedFlatBackend(BaseIndex):
+    """The FUSED pipeline sharded over a device mesh with an exact
+    global candidate set (DESIGN.md §15, ``core/sharded.py``).
+
+    Unlike the legacy ``sharded`` backend (pre-fused local top-T'
+    heuristic), answers are bit-identical to ``flat`` on ties-free
+    data: shards exchange only per-shard survivor counts to calibrate
+    one global select threshold, verify locally, and merge one
+    all-gather of k.  CP runs the ring pair-join under a global ub
+    register with tile-level radius pruning on cross-shard tiles.
+
+    options: ``shards`` (logical shard count; defaults to the visible
+    device count), ``emulate`` (force the host-emulated multi-shard
+    path — used when shards > devices, e.g. parity tests on one
+    device), ``cp_gamma`` / ``rerank`` / ``force`` as on ``flat``.
+
+    WorkStats: summed counters match the single-device run
+    (candidates_selected sums shard survivor counts = realized T·B;
+    pairs_verified counts each pair on exactly one shard) and the
+    sharded fields report mesh width + max-shard skew.
+    """
+
+    quant: str | None = None
+
+    def _build(self) -> None:
+        from repro.core.sharded import ShardedFlatIndex
+
+        cfg = self.config
+        self.force = cfg.options.get("force")
+        copts = dict(cfg.options.get("pq") or {}) if self.quant else None
+        self.impl = ShardedFlatIndex(
+            self.data,
+            shards=cfg.options.get("shards"),
+            mesh=cfg.options.get("mesh"),
+            m=cfg.m, seed=cfg.seed, c=cfg.c,
+            emulate=bool(cfg.options.get("emulate", False)),
+            quant=self.quant, quant_opts=copts,
+            rerank=cfg.options.get("rerank"),
+            force=self.force,
+            cp_tile=int(cfg.options.get("cp_tile", 128)),
+        )
+        self.params = self.impl.params
+        import jax.numpy as jnp
+
+        self._data_jnp = jnp.asarray(self.data)
+
+    def _search(self, q: np.ndarray, k: int) -> SearchResult:
+        T = candidate_budget(self.params, self.n, k)
+        B = q.shape[0]
+        if otrace.enabled():
+            ids, dd, counts = self.impl.query_traced(q, k, T)
+        else:
+            ids, dd, counts = self.impl.query(q, k, T)
+        # canonical answer floats — same shared program as ``flat``, so
+        # id-parity implies bit-identical distances (DESIGN.md §15)
+        dd = np.asarray(answer_distances(self._data_jnp, ids, q))
+        per_shard = counts.sum(axis=1)  # (P,) survivor totals
+        selected = int(per_shard.sum())
+        stats = WorkStats(
+            rounds=B,
+            candidates_verified=selected,
+            candidates_selected=selected,
+            shards=self.impl.P,
+            max_shard_candidates=int(per_shard.max()),
+        )
+        if self.quant:
+            # the ADC tier scored every survivor; exact verification
+            # touched only the reranked survivors per shard
+            cap = min(self.impl.nl, T)
+            R_l = min(self.impl._rerank_budget(k, T), cap)
+            stats.point_distance_computations = selected
+            stats.candidates_verified = int(
+                np.minimum(counts, R_l).sum())
+        return SearchResult(np.asarray(ids), np.asarray(dd), stats=stats)
+
+    def _cp_search(self, k: int) -> CpSearchResult:
+        from repro.core.cp_fused import cp_threshold2
+
+        cfg = self.config
+        gamma = float(cfg.options.get("cp_gamma", 1.0))
+        thresh2 = (np.inf if not np.isfinite(gamma)
+                   else cp_threshold2(cfg.cp_c, cfg.m, gamma))
+        pairs, dd, pair_counts, pruned = self.impl.cp_query(
+            k, thresh2=float(thresh2), traced=otrace.enabled())
+        verified = int(pair_counts.sum())
+        return CpSearchResult(
+            pairs, dd,
+            stats=WorkStats(candidates_verified=verified,
+                            pairs_verified=verified,
+                            tiles_pruned=pruned,
+                            shards=self.impl.P,
+                            max_shard_pairs=int(pair_counts.max())))
+
+
+@register_backend("sharded-flat-pq", capabilities=("ann", "cp", "quant"))
+class ShardedFlatPQBackend(ShardedFlatBackend):
+    """``sharded-flat`` with per-shard PQ codebooks: each shard trains
+    its own codec on the rows it stores, survivors are ADC-reranked
+    shard-locally, and only the best R rows per shard pay an exact
+    verification (raw rows are retained — the quantized tier is a
+    bandwidth lever here, not a storage-drop lever, so ``cp_search``
+    and the recall floor stay exact-verified; codebook options nest
+    under ``options={"pq": {...}}`` as on ``flat``)."""
+
+    quant = "pq"
+
+    def bytes_per_point(self) -> float:
+        per_point = self.impl.codecs[0].bytes_per_point
+        codebook = sum(getattr(c, "codebook_bytes", 0)
+                       for c in self.impl.codecs)
+        return per_point + codebook / max(self.n, 1)
 
 
 # ---------------------------------------------------------------------------

@@ -48,13 +48,29 @@ class WorkStats:
     pairs_verified: int = 0
     tiles_pruned: int = 0
     # facade-level hygiene: query rows masked to sentinel results
-    # because they carried NaN/Inf (appended LAST — as_dict/from_dict
-    # tolerate the skew, and older positional constructions stay valid)
+    # because they carried NaN/Inf (appended after the counters above —
+    # as_dict/from_dict tolerate the skew, and older positional
+    # constructions stay valid)
     queries_rejected: int = 0
+    # sharded accounting (DESIGN.md §15): mesh width and per-shard work
+    # skew.  The summed counters above stay globally comparable (a P-way
+    # run sums its shards before reporting), while the max-shard fields
+    # expose the straggler: max over shards of that shard's select
+    # survivors (ANN) / verified pairs (CP).  Max-semantics under
+    # aggregation — summing two batches must not add skews.
+    shards: int = 0
+    max_shard_candidates: int = 0
+    max_shard_pairs: int = 0
+
+    # fields that aggregate by max, not sum (skew/topology, not work)
+    _MAX_FIELDS = frozenset({"shards", "max_shard_candidates",
+                             "max_shard_pairs"})
 
     def __add__(self, other: "WorkStats") -> "WorkStats":
         return WorkStats(**{
-            f.name: getattr(self, f.name) + getattr(other, f.name)
+            f.name: (max(getattr(self, f.name), getattr(other, f.name))
+                     if f.name in self._MAX_FIELDS
+                     else getattr(self, f.name) + getattr(other, f.name))
             for f in dataclasses.fields(self)
         })
 

@@ -1,0 +1,51 @@
+"""All-gather-of-k MERGE: the final reduction of the sharded ANN query.
+
+After every shard verifies its local survivors into a device-local
+top-k_l, the merge pools the P · k_l (distance², global id) pairs —
+one small all-gather, k_l entries per shard, the only payload exchange
+in the whole sharded query — and takes the global top-k.
+
+Semantics contract (``merge_topk_ref``): ascending ``lax.top_k`` over
+the pooled squared distances, distance = sqrt(max(d2, 0)), id = -1
+wherever the pooled slot was an +inf pad (a shard that held fewer than
+k_l survivors).  This is the same compare-then-sqrt tail as the flat
+query's answer step, which is what makes the sharded answer
+bit-identical to the single-device one once the pooled candidates are
+the same set (see core/sharded.py for why they are).
+
+The pool is (B, P·k_l) — a few KiB.  The merge is bandwidth-trivial
+next to verify (see ``obs.roofline.shard_merge_cost``), so the kernel
+IS the reference: a fused pallas variant would save nothing
+measurable, and keeping one implementation keeps the parity proof
+one-hop.  ``ops.topk_smallest`` remains the route for large-pool
+selection if a later PR grows k_l.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["merge_topk", "merge_topk_ref"]
+
+
+def merge_topk_ref(d2_pool: jax.Array, gid_pool: jax.Array,
+                   k: int) -> tuple[jax.Array, jax.Array]:
+    """Pure-jnp oracle.  d2_pool (B, L) float32, gid_pool (B, L) int32,
+    L ≥ k.  Returns (ids (B, k) int32, dists (B, k) float32 ascending),
+    ids -1 where the winning slot was padding (+inf)."""
+    neg, sel = jax.lax.top_k(-d2_pool, k)
+    d2 = -neg
+    ids = jnp.take_along_axis(gid_pool, sel, axis=1)
+    ids = jnp.where(jnp.isfinite(d2), ids, -1).astype(jnp.int32)
+    dists = jnp.sqrt(jnp.maximum(d2, 0.0)).astype(jnp.float32)
+    return ids, dists
+
+
+@partial(jax.jit, static_argnames=("k",))
+def merge_topk(d2_pool: jax.Array, gid_pool: jax.Array,
+               k: int) -> tuple[jax.Array, jax.Array]:
+    """Public merge entry point (jit'd; safe inside shard_map — it
+    inlines under the enclosing trace)."""
+    return merge_topk_ref(d2_pool, gid_pool, k)

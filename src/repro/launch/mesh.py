@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import jax
 
-from repro.compat import make_mesh
+from repro.compat import make_mesh, make_submesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -28,6 +28,15 @@ def make_host_mesh(model: int = 1):
     n = jax.device_count()
     model = min(model, n)
     return make_mesh((n // model, model), ("data", "model"))
+
+
+def make_data_mesh(shards: int | None = None, axis: str = "data"):
+    """1-D row-sharding mesh for the sharded index backends
+    (DESIGN.md §15) — over the FIRST ``shards`` devices, so the P ∈
+    {1, 2, 4} layouts run on an 8-device host (``make_mesh`` would
+    insist on consuming every device)."""
+    n = jax.device_count() if shards is None else int(shards)
+    return make_submesh((n,), (axis,))
 
 
 def dp_axes(mesh) -> tuple[str, ...]:

@@ -245,3 +245,33 @@ def cache_shardings(cache_specs_tree: Any, mesh, *, batch: int, max_seq: int) ->
 
 def replicated(mesh):
     return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# index arrays (the sharded PM-LSH backends, DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+
+def index_row_pspec(ndim: int, axis: str = "data") -> P:
+    """Row-sharded index array (points / projections / codes): dim 0
+    over the data axis, trailing dims replicated — the layout every
+    sharded-flat device buffer uses."""
+    return P(axis, *([None] * (ndim - 1)))
+
+
+def index_shardings(arrays: dict, mesh, axis: str = "data") -> dict:
+    """NamedShardings for a dict of index arrays (name → array or
+    abstract shape).  Leading dims must divide the axis — the sharded
+    index pads rows at build (``core.sharded.pad_rows``) instead of
+    falling back to replication, because a replicated point store
+    defeats the point of the backend."""
+    size = axis_size(mesh, axis)
+    out = {}
+    for name, arr in arrays.items():
+        if arr.shape[0] % size != 0:
+            raise ValueError(
+                f"index array {name!r} rows {arr.shape[0]} do not divide "
+                f"mesh axis {axis!r}={size}; pad rows first "
+                f"(core.sharded.pad_rows)")
+        out[name] = NamedSharding(mesh, index_row_pspec(arr.ndim, axis))
+    return out

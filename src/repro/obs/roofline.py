@@ -174,6 +174,38 @@ def pair_join_cost(n: int, d: int, k: int, block_n: int = 128,
         flops=tiles * (2 * block_n * block_n * d + block_n * block_n * k))
 
 
+def shard_exchange_cost(P: int, B: int, k_l: int,
+                        rounds: int = 32) -> KernelCost:
+    """Sharded-ANN THRESHOLD EXCHANGE: the counts-only bisection.  Each
+    of the ``rounds`` rungs psums one (B,) int32 survivor count per
+    shard — ``rounds·P·B`` int32 on the wire, zero candidate payload.
+    (The k_l argument is carried so callers can log the companion merge
+    volume next to it; it does not enter this cost.)  FLOPs are the
+    per-rung compare+reduce over nothing the model sees — counted as
+    the P·B adds of the reduction tree."""
+    del k_l
+    return KernelCost(bytes=rounds * P * B * 4,
+                      flops=rounds * P * B)
+
+
+def shard_merge_cost(P: int, B: int, k_l: int) -> KernelCost:
+    """All-gather-of-k MERGE: each shard contributes (B, k_l) float32
+    distances + int32 ids; the replicated pool is P·B·k_l·8 bytes, the
+    final selection P·B·k_l·k_l-ish compares (modeled linear — top_k
+    over an L-pool is O(L log k), noise either way)."""
+    return KernelCost(bytes=P * B * k_l * (F32 + 4),
+                      flops=P * B * k_l)
+
+
+def shard_ring_cost(P: int, nl: int, d: int, k: int) -> KernelCost:
+    """One CP ring hop: every shard ppermutes its (nl, d) row block,
+    (nl,) norms + keys, (nl,) ids to its neighbor, and the round's ub
+    register refresh all-gathers each shard's (k,) running best."""
+    return KernelCost(
+        bytes=P * (nl * d * F32 + 3 * nl * F32 + k * F32),
+        flops=P * nl * d)
+
+
 # ---------------------------------------------------------------------------
 # achieved performance: model + measured time → roofline placement
 # ---------------------------------------------------------------------------

@@ -101,6 +101,57 @@ class TestTrainLoopFT:
         )
 
 
+class TestShardedElasticRemesh:
+    """Elastic remesh for the sharded ANN/CP backends (DESIGN.md §15):
+    the threshold-exchange protocol makes answers a pure function of the
+    data, so rebuilding the index at a DIFFERENT shard count after a
+    node loss must return bit-identical results — remesh is just a
+    rebuild, no answer drift to re-validate."""
+
+    def _data(self, n=203, d=24, seed=5):
+        r = np.random.default_rng(seed)
+        centers = r.normal(size=(16, d)) * 4
+        return (centers[r.integers(0, 16, n)]
+                + r.normal(size=(n, d)) * 0.5).astype(np.float32)
+
+    def test_remesh_bit_identical_answers(self):
+        from repro.index import IndexConfig, build_index
+
+        data = self._data()
+        q = data[:7] + np.float32(0.05)
+        results = {}
+        for P in (2, 8):  # "lost" 6 of 8 shards → rebuilt at 2
+            idx = build_index(data, IndexConfig(
+                backend="sharded-flat",
+                options={"shards": P, "emulate": True, "force": "ref"}))
+            results[P] = (idx.search(q, 10), idx.cp_search(6))
+        r2, c2 = results[2]
+        r8, c8 = results[8]
+        np.testing.assert_array_equal(r2.indices, r8.indices)
+        np.testing.assert_array_equal(r2.distances, r8.distances)
+        np.testing.assert_array_equal(c2.pairs, c8.pairs)
+        np.testing.assert_array_equal(c2.distances, c8.distances)
+
+    def test_remesh_workstats_rescale(self):
+        """After remesh the total work is invariant but the skew field
+        tracks the new topology — the signal an elastic controller uses
+        to decide whether the shrunken mesh can still hold the load."""
+        from repro.index import IndexConfig, build_index
+
+        data = self._data()
+        q = data[:5] + np.float32(0.05)
+        stats = {}
+        for P in (2, 8):
+            idx = build_index(data, IndexConfig(
+                backend="sharded-flat",
+                options={"shards": P, "emulate": True, "force": "ref"}))
+            stats[P] = idx.search(q, 10).stats
+        assert stats[2].candidates_selected == stats[8].candidates_selected
+        assert stats[2].shards == 2 and stats[8].shards == 8
+        # fewer shards → each shard holds more of the candidate set
+        assert stats[2].max_shard_candidates >= stats[8].max_shard_candidates
+
+
 class TestPrefetcher:
     def test_ordered_and_closes(self):
         from repro.data.pipeline import Prefetcher, SyntheticTokens
